@@ -1,0 +1,3 @@
+"""Shim: the while-aware HLO analyzer lives in repro.launch.hlo_analysis."""
+from repro.launch.hlo_analysis import (Computation, accumulate, analyze,  # noqa
+                                       parse_hlo, trip_count)

@@ -1,0 +1,233 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  coverage      — Table 1: 31-kernel suite, flat vs hierarchical support
+  flat_vs_hier  — Fig. 12: hierarchical overhead on warp-free kernels
+  simd_vote     — Table 2: warp vote with vectorized vs scalar collectives
+  jit_mode      — Fig. 13: JIT (unrolled) vs normal (fori) mode
+  scalability   — Fig. 14: blocks across host devices (subprocess, 8 dev)
+  roofline      — §Roofline terms from results/dryrun_all.json (if present)
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import cox  # noqa: E402
+from repro.core.flat import FlatUnsupported, supports_flat  # noqa: E402
+from repro.core.types import CoxUnsupported  # noqa: E402
+
+
+def _time_call(fn, *args, warmup=2, iters=10):
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        _block(out)
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6  # µs
+
+
+def _block(out):
+    import jax
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+        else x, out)
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+
+
+def coverage():
+    """Table 1: which kernels each collapsing strategy supports."""
+    from benchmarks.kernels_suite import KERNELS
+    from repro.core.oracle import run_grid as oracle_run
+    n_flat = n_hier = n_total = 0
+    for sk in KERNELS:
+        n_total += 1
+        if sk.kernel is None:
+            _row(f"coverage.{sk.name}", 0.0,
+                 f"features={sk.features};flat=no;cox=no;"
+                 f"reason={sk.unsupported_reason[:40]}")
+            continue
+        flat_ok = supports_flat(sk.kernel.ir)
+        args = sk.make_args()
+        t0 = time.perf_counter()
+        try:
+            out = sk.kernel.launch(grid=sk.grid, block=sk.block, args=args,
+                                   collapse="hier")
+            hier_ok = True
+            # verify against the per-thread oracle
+            ref = oracle_run(sk.kernel.ir, grid=sk.grid, block=sk.block,
+                             args=args)
+            for k in ref:
+                got = np.asarray(out[k], np.float32)
+                want = np.asarray(ref[k], np.float32)
+                assert np.allclose(got, want, rtol=1e-4, atol=1e-4), \
+                    f"{sk.name}.{k} mismatch"
+            if sk.check is not None:
+                assert sk.check(out), f"{sk.name} check failed"
+        except CoxUnsupported:
+            hier_ok = False
+        us = (time.perf_counter() - t0) * 1e6
+        n_flat += flat_ok
+        n_hier += hier_ok
+        _row(f"coverage.{sk.name}", us,
+             f"features={sk.features or 'none'};"
+             f"flat={'yes' if flat_ok else 'no'};"
+             f"cox={'yes' if hier_ok else 'no'}")
+    _row("coverage.TOTAL", 0.0,
+         f"flat={n_flat}/{n_total}({100*n_flat//n_total}%);"
+         f"cox={n_hier}/{n_total}({100*n_hier//n_total}%);"
+         f"paper: POCL 39%, DPCT 68%, COX 90%")
+
+
+# ---------------------------------------------------------------------------
+
+
+def flat_vs_hier():
+    """Fig. 12: hierarchical-collapsing overhead on warp-free kernels."""
+    from benchmarks.kernels_suite import KERNELS
+    picks = ["vectorAdd", "MatrixMulCUDA", "reduce0"]
+    ratios = []
+    for sk in KERNELS:
+        if sk.name not in picks:
+            continue
+        args = sk.make_args()
+
+        def run(mode):
+            return sk.kernel.launch(grid=sk.grid, block=sk.block,
+                                    args=args, collapse=mode)
+
+        us_flat = _time_call(lambda: run("flat"))
+        us_hier = _time_call(lambda: run("hier"))
+        ratios.append(us_hier / us_flat)
+        _row(f"flat_vs_hier.{sk.name}", us_hier,
+             f"flat_us={us_flat:.1f};overhead={us_hier / us_flat:.2f}x")
+    _row("flat_vs_hier.MEAN", 0.0,
+         f"overhead={statistics.mean(ratios):.2f}x;paper=1.13x")
+
+
+# ---------------------------------------------------------------------------
+
+
+def simd_vote():
+    """Table 2: vote_all / vote_any with SIMD (lane-vector) vs scalar
+    (per-lane loop) collective implementations.
+
+    Two granularities: the whole kernel launch (includes grid machinery,
+    like the paper's timing) and the collective function itself in
+    isolation (the paper's instruction-count story)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import collectives as C
+    from benchmarks.kernels_suite import KERNELS
+
+    for nm in ("VoteAllKernel2", "VoteAnyKernel1"):
+        sk = next(k for k in KERNELS if k.name == nm)
+        args = sk.make_args()
+
+        def run(simd):
+            return sk.kernel.launch(grid=sk.grid, block=sk.block, args=args,
+                                    simd=simd, collapse="hier")
+
+        us_simd = _time_call(lambda: run(True))
+        us_scalar = _time_call(lambda: run(False))
+        _row(f"simd_vote.{nm}", us_simd,
+             f"scalar_us={us_scalar:.1f};"
+             f"speedup={us_scalar / us_simd:.2f}x;paper=10x")
+
+    # micro: the collective alone, 8192 warps at once
+    buf = jnp.asarray(
+        np.random.default_rng(0).integers(0, 2, (8192, 32)).astype(bool))
+    for fname in ("vote_all", "vote_any"):
+        fv = jax.jit(jax.vmap(lambda b: C.VECTORIZED[fname](b, W=32)))
+        fs = jax.jit(jax.vmap(lambda b: C.SCALAR[fname](b, W=32)))
+        us_v = _time_call(lambda: fv(buf))
+        us_s = _time_call(lambda: fs(buf))
+        _row(f"simd_vote.micro_{fname}", us_v,
+             f"scalar_us={us_s:.1f};speedup={us_s / us_v:.2f}x;paper=10x")
+
+
+# ---------------------------------------------------------------------------
+
+
+def jit_mode():
+    """Fig. 13: JIT mode (block size burned in, loops unrolled) vs
+    normal mode (fori inter-warp loop)."""
+    from benchmarks.kernels_suite import KERNELS
+    for nm in ("vectorAdd", "MatrixMulCUDA", "reduce4"):
+        sk = next(k for k in KERNELS if k.name == nm)
+        args = sk.make_args()
+
+        def run(mode):
+            return sk.kernel.launch(grid=sk.grid, block=sk.block, args=args,
+                                    mode=mode, collapse="hier")
+
+        us_jit = _time_call(lambda: run("jit"))
+        us_normal = _time_call(lambda: run("normal"))
+        _row(f"jit_mode.{nm}", us_jit,
+             f"normal_us={us_normal:.1f};"
+             f"jit_speedup={us_normal / us_jit:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+
+
+def scalability():
+    """Fig. 14: multi-block kernels across host devices (8-dev subprocess
+    — device count must be set before jax initializes)."""
+    worker = os.path.join(os.path.dirname(__file__), "scalability_worker.py")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, worker], capture_output=True,
+                       text=True, env=env, timeout=1200)
+    sys.stdout.write(r.stdout)
+    if r.returncode != 0:
+        _row("scalability.FAILED", 0.0, r.stderr[-200:].replace("\n", ";"))
+
+
+# ---------------------------------------------------------------------------
+
+
+def roofline():
+    """§Roofline: three terms per dry-run cell (prefers the corrected
+    single-pod baseline, falls back to the multi-pod record)."""
+    base = os.path.join(os.path.dirname(__file__), "..", "results")
+    for name in ("roofline_base.json", "dryrun_all.json"):
+        path = os.path.join(base, name)
+        if os.path.exists(path):
+            from benchmarks.roofline import emit_rows
+            emit_rows(path)
+            return
+    _row("roofline.SKIPPED", 0.0, "run repro.launch.dryrun --all first")
+
+
+def main() -> None:
+    coverage()
+    flat_vs_hier()
+    simd_vote()
+    jit_mode()
+    scalability()
+    roofline()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Batched serving example: continuous batching of synthetic requests
+through the jitted serve step (the same graph the dry-run lowers at
+32k context × 512 chips).
+
+    PYTHONPATH=src python examples/serve_batched.py --requests 12
+"""
+import argparse
+
+from repro.launch.serve import serve_requests
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ctx", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+    out = serve_requests(args.arch, batch=args.batch, ctx=args.ctx,
+                         n_requests=args.requests, max_tokens=args.tokens)
+    print(f"served {out['completed']} requests / {out['tokens']} tokens "
+          f"in {out['wall_s']:.1f}s -> {out['tok_per_s']:.1f} tok/s "
+          f"(batch={args.batch}, ctx={args.ctx})")
+
+
+if __name__ == "__main__":
+    main()

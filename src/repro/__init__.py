@@ -1,0 +1,3 @@
+"""repro: COX (CUDA-on-X86 via hierarchical collapsing) adapted to JAX/TPU,
+embedded in a production-scale training/serving framework."""
+__version__ = "0.1.0"

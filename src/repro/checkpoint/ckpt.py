@@ -1,0 +1,165 @@
+"""Sharded checkpointing with atomic commit, async save, elastic restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000100.tmp/...      while writing
+    <dir>/step_000100/manifest.json
+    <dir>/step_000100/<leaf-path>.npy
+    <dir>/LATEST                   atomic pointer file
+
+Design points for the 1000-node posture:
+* arrays are written in *logical* (unsharded) layout — a restore may use
+  any mesh/sharding (elastic scaling: N pods → M pods just works);
+* commit is atomic: write to `.tmp`, fsync, rename, then swap LATEST —
+  a crash mid-save never corrupts the restore point;
+* saves run on a background thread (training continues; `wait()` joins);
+* every leaf records dtype/shape in the manifest and is verified on
+  load (detects silent corruption / topology mismatch).
+
+On a real cluster the npy writes go per-host for the host's shards
+(process-local paths); on this single-host validation platform the full
+array is written once.  bf16 is stored via a uint16 view (npy has no
+bf16 dtype).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaf_path(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "__".join(out) or "root"
+
+
+def _to_numpy(x) -> Tuple[np.ndarray, str]:
+    x = np.asarray(jax.device_get(x))
+    if x.dtype == jnp.bfloat16:
+        return x.view(np.uint16), "bfloat16"
+    return x, str(x.dtype)
+
+
+def _from_numpy(a: np.ndarray, dtype: str):
+    if dtype == "bfloat16":
+        return jnp.asarray(a.view(jnp.bfloat16))
+    return jnp.asarray(a)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ----------------------------- save -----------------------------
+
+    def save(self, step: int, tree: Any, blocking: bool = False):
+        """Snapshot (device_get) then write; async unless blocking."""
+        leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+        snap = [(_leaf_path(p), _to_numpy(x)) for p, x in leaves]
+        self.wait()
+        if blocking:
+            self._write(step, snap)
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, snap), daemon=True)
+            self._thread.start()
+
+    def _write(self, step: int, snap):
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "time": time.time(), "leaves": {}}
+        for key, (arr, dtype) in snap:
+            np.save(os.path.join(tmp, key + ".npy"), arr)
+            manifest["leaves"][key] = {"dtype": dtype,
+                                       "shape": list(arr.shape)}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        latest_tmp = os.path.join(self.dir, "LATEST.tmp")
+        with open(latest_tmp, "w") as f:
+            f.write(name)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(latest_tmp, os.path.join(self.dir, "LATEST"))
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    # ----------------------------- load -----------------------------
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            name = f.read().strip()
+        if not os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+            return None
+        return int(name.split("_")[1])
+
+    def restore(self, step: int, like: Any,
+                shardings: Optional[Any] = None) -> Any:
+        """Restore into the structure of `like` (abstract or concrete).
+        `shardings`: matching tree of NamedShardings for elastic
+        re-placement onto the current mesh."""
+        name = f"step_{step:08d}"
+        base = os.path.join(self.dir, name)
+        with open(os.path.join(base, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+        sh_leaves = None
+        if shardings is not None:
+            sh_leaves = jax.tree_util.tree_flatten(shardings)[0]
+        out = []
+        for i, (p, x) in enumerate(leaves):
+            key = _leaf_path(p)
+            meta = manifest["leaves"].get(key)
+            if meta is None:
+                raise KeyError(f"checkpoint {name} is missing leaf {key}")
+            arr = np.load(os.path.join(base, key + ".npy"))
+            if list(arr.shape) != list(meta["shape"]):
+                raise ValueError(f"corrupt leaf {key}: {arr.shape} vs "
+                                 f"{meta['shape']}")
+            val = _from_numpy(arr, meta["dtype"])
+            want_shape = tuple(getattr(x, "shape", val.shape))
+            if tuple(val.shape) != want_shape:
+                raise ValueError(f"leaf {key}: checkpoint {val.shape} vs "
+                                 f"model {want_shape} (arch mismatch)")
+            if sh_leaves is not None:
+                val = jax.device_put(val, sh_leaves[i])
+            out.append(val)
+        return jax.tree_util.tree_unflatten(treedef, [x for x in out])

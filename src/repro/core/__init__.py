@@ -1,0 +1,10 @@
+"""COX core: hierarchical collapsing for CUDA-style SPMD kernels in JAX.
+
+Public surface:
+
+    from repro.core import cox          # kernel decorator + dtypes
+    from repro.core.execute import compile_kernel
+    from repro.core.oracle import run_grid as oracle_run
+"""
+from . import api as cox  # noqa: F401
+from .types import BarrierLevel, CoxUnsupported, DType, WARP_SIZE  # noqa: F401

@@ -1,0 +1,83 @@
+"""Public COX API.
+
+    from repro.core import cox
+
+    @cox.kernel
+    def vec_add(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32),
+                b: cox.Array(cox.f32), n: cox.i32):
+        i = c.block_idx() * c.block_dim() + c.thread_idx()
+        if i < n:
+            out[i] = a[i] + b[i]
+
+    out = vec_add.launch(grid=4, block=256, args=(out, a, b, n))["out"]
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Sequence
+
+from . import flat as _flat
+from . import kernel_ir as K
+from .execute import CompiledKernel, compile_kernel
+from .frontend import Array, parse_kernel
+from .runtime import launch as _launch
+from .types import CoxUnsupported, DType, WARP_SIZE
+
+# dtype shorthands (annotation + c.shared dtype arguments)
+f32 = DType.f32
+f16 = DType.f16
+bf16 = DType.bf16
+i32 = DType.i32
+u32 = DType.u32
+b1 = DType.b1
+
+
+@dataclasses.dataclass
+class KernelFn:
+    """A parsed CUDA-style kernel plus a compile cache."""
+    ir: K.Kernel
+    _cache: Dict[Any, CompiledKernel] = dataclasses.field(default_factory=dict)
+
+    @property
+    def name(self) -> str:
+        return self.ir.name
+
+    def compiled(self, *, collapse: str = "hybrid",
+                 warp_size: int = WARP_SIZE,
+                 block: Optional[int] = None) -> CompiledKernel:
+        """Run the pass pipeline.  collapse='flat' uses warp_size=block
+        (single block-wide loop; requires `block`); 'hier' is the paper's
+        hierarchical collapsing; 'hybrid' picks automatically."""
+        choice = _flat.choose_collapse(self.ir, collapse)
+        if choice == "flat":
+            if block is None:
+                raise ValueError("flat collapsing specializes on block size; "
+                                 "pass block=")
+            ws = block
+        else:
+            ws = warp_size
+        key = (choice, ws)
+        if key not in self._cache:
+            self._cache[key] = compile_kernel(self.ir, warp_size=ws)
+        return self._cache[key]
+
+    def launch(self, *, grid: int, block: int, args: Sequence[Any],
+               collapse: str = "hybrid", mode: str = "normal",
+               simd: bool = True, warp_size: int = WARP_SIZE,
+               mesh=None, axis: str = "data") -> Dict[str, Any]:
+        ck = self.compiled(collapse=collapse, warp_size=warp_size, block=block)
+        return _launch(ck, grid=grid, block=block, args=args, mode=mode,
+                       simd=simd, mesh=mesh, axis=axis)
+
+    def uses_warp_features(self) -> bool:
+        return K.uses_warp_features(self.ir)
+
+
+def kernel(fn=None, *, name: Optional[str] = None):
+    """Decorator: parse a restricted-Python CUDA-style kernel."""
+    def wrap(f):
+        return KernelFn(parse_kernel(f, name=name))
+    if fn is None:
+        return wrap
+    return wrap(fn)

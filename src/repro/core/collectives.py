@@ -1,0 +1,219 @@
+"""Warp-level collective implementations.
+
+Two backends, mirroring the paper's Table 2 (warp vote w/ and w/o AVX):
+
+* **vectorized** — lane-axis vector ops on the (W,) warp buffer.  On x86
+  the paper uses AVX; on TPU these lower to VPU lane shifts/reductions;
+  on the CPU validation platform XLA vectorizes them.
+* **scalar** — per-lane `lax.fori_loop` emulation (the paper's "w/o AVX"
+  baseline: one instruction + branch per lane).
+
+All collectives honour a static tile ``width`` (cooperative-group
+``thread_block_tile<N>``) — width == 0 or W means the full warp.  The
+``mask`` argument carries the active-lane mask (threads past block_size
+in a partial last warp); inactive lanes contribute the operation's
+identity, matching CUDA's behaviour where such lanes simply do not
+exist.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .types import CoxUnsupported
+
+
+def _tile(width: int, W: int) -> int:
+    w = width or W
+    if w > W or (W % w) != 0 or w & (w - 1):
+        raise CoxUnsupported(f"tile width {w} invalid for warp size {W}")
+    return w
+
+
+def _seg(buf: jnp.ndarray, w: int):
+    return buf.reshape((-1, w))
+
+
+# ---------------------------------------------------------------------------
+# vectorized (SIMD) backend
+# ---------------------------------------------------------------------------
+
+
+def shfl_down(buf, off, W: int, width: int = 0, mask=None):
+    w = _tile(width, W)
+    lane = jnp.arange(W, dtype=jnp.int32)
+    sub = lane % w
+    src = jnp.clip(lane + off, 0, W - 1)
+    shifted = buf[src]
+    # CUDA: lanes whose source falls outside the tile keep their own value
+    return jnp.where(sub + off < w, shifted, buf)
+
+
+def shfl_up(buf, off, W: int, width: int = 0, mask=None):
+    w = _tile(width, W)
+    lane = jnp.arange(W, dtype=jnp.int32)
+    sub = lane % w
+    src = jnp.clip(lane - off, 0, W - 1)
+    shifted = buf[src]
+    return jnp.where(sub - off >= 0, shifted, buf)
+
+
+def shfl_xor(buf, lanemask, W: int, width: int = 0, mask=None):
+    w = _tile(width, W)
+    lane = jnp.arange(W, dtype=jnp.int32)
+    src = lane ^ lanemask
+    ok = (src % w) == ((lane % w) ^ lanemask)  # stays inside the tile
+    src = jnp.clip(src, 0, W - 1)
+    return jnp.where(ok, buf[src], buf)
+
+
+def shfl_idx(buf, srclane, W: int, width: int = 0, mask=None):
+    w = _tile(width, W)
+    lane = jnp.arange(W, dtype=jnp.int32)
+    base = (lane // w) * w
+    src = base + (srclane % w).astype(jnp.int32)
+    return buf[jnp.clip(src, 0, W - 1)]
+
+
+def vote_all(buf, W: int, width: int = 0, mask=None):
+    w = _tile(width, W)
+    b = buf.astype(jnp.bool_)
+    if mask is not None:
+        b = b | ~mask  # inactive lanes vote True (identity of AND)
+    seg = _seg(b, w).all(axis=1)
+    return jnp.repeat(seg, w)
+
+
+def vote_any(buf, W: int, width: int = 0, mask=None):
+    w = _tile(width, W)
+    b = buf.astype(jnp.bool_)
+    if mask is not None:
+        b = b & mask
+    seg = _seg(b, w).any(axis=1)
+    return jnp.repeat(seg, w)
+
+
+def ballot(buf, W: int, width: int = 0, mask=None):
+    w = _tile(width, W)
+    b = buf.astype(jnp.bool_)
+    if mask is not None:
+        b = b & mask
+    weights = (jnp.uint32(1) << jnp.arange(w, dtype=jnp.uint32))
+    seg = (_seg(b, w).astype(jnp.uint32) * weights).sum(axis=1, dtype=jnp.uint32)
+    return jnp.repeat(seg, w)
+
+
+def red_add(buf, W: int, width: int = 0, mask=None):
+    w = _tile(width, W)
+    b = buf
+    if mask is not None:
+        b = jnp.where(mask, b, jnp.zeros_like(b))
+    seg = _seg(b, w).sum(axis=1)
+    return jnp.repeat(seg, w)
+
+
+def red_max(buf, W: int, width: int = 0, mask=None):
+    w = _tile(width, W)
+    b = buf
+    if mask is not None:
+        lo = jnp.finfo(b.dtype).min if jnp.issubdtype(b.dtype, jnp.floating) \
+            else jnp.iinfo(b.dtype).min
+        b = jnp.where(mask, b, jnp.full_like(b, lo))
+    seg = _seg(b, w).max(axis=1)
+    return jnp.repeat(seg, w)
+
+
+def red_min(buf, W: int, width: int = 0, mask=None):
+    w = _tile(width, W)
+    b = buf
+    if mask is not None:
+        hi = jnp.finfo(b.dtype).max if jnp.issubdtype(b.dtype, jnp.floating) \
+            else jnp.iinfo(b.dtype).max
+        b = jnp.where(mask, b, jnp.full_like(b, hi))
+    seg = _seg(b, w).min(axis=1)
+    return jnp.repeat(seg, w)
+
+
+VECTORIZED = {
+    "shfl_down": shfl_down, "shfl_up": shfl_up, "shfl_xor": shfl_xor,
+    "shfl_idx": shfl_idx, "vote_all": vote_all, "vote_any": vote_any,
+    "ballot": ballot, "red_add": red_add, "red_max": red_max,
+    "red_min": red_min,
+}
+
+
+# ---------------------------------------------------------------------------
+# scalar backend (per-lane loops — the paper's "w/o AVX" rows in Table 2)
+# ---------------------------------------------------------------------------
+
+
+def _scalar_vote(buf, W, width, mask, op, identity):
+    w = _tile(width, W)
+    n_seg = W // w
+    b = buf.astype(jnp.bool_)
+    if mask is not None:
+        b = (b | ~mask) if op == "all" else (b & mask)
+
+    def per_segment(s, acc):
+        def lane_step(i, a):
+            v = b[s * w + i]
+            return (a & v) if op == "all" else (a | v)
+        return lax.fori_loop(0, w, lane_step, jnp.array(identity, jnp.bool_))
+
+    def seg_step(s, out):
+        r = per_segment(s, None)
+        return lax.dynamic_update_slice(out, jnp.broadcast_to(r, (w,)), (s * w,))
+
+    return lax.fori_loop(0, n_seg, seg_step, jnp.zeros((W,), jnp.bool_))
+
+
+def scalar_vote_all(buf, W, width=0, mask=None):
+    return _scalar_vote(buf, W, width, mask, "all", True)
+
+
+def scalar_vote_any(buf, W, width=0, mask=None):
+    return _scalar_vote(buf, W, width, mask, "any", False)
+
+
+def scalar_red_add(buf, W, width=0, mask=None):
+    w = _tile(width, W)
+    n_seg = W // w
+    b = buf if mask is None else jnp.where(mask, buf, jnp.zeros_like(buf))
+
+    def seg_step(s, out):
+        def lane_step(i, a):
+            return a + b[s * w + i]
+        r = lax.fori_loop(0, w, lane_step, jnp.zeros((), b.dtype))
+        return lax.dynamic_update_slice(out, jnp.broadcast_to(r, (w,)), (s * w,))
+
+    return lax.fori_loop(0, n_seg, seg_step, jnp.zeros((W,), b.dtype))
+
+
+def scalar_shfl_down(buf, off, W, width=0, mask=None):
+    w = _tile(width, W)
+
+    def lane_step(i, out):
+        sub = i % w
+        src = jnp.where(sub + off < w, i + off, i)
+        return out.at[i].set(buf[src])
+
+    return lax.fori_loop(0, W, lane_step, jnp.zeros_like(buf))
+
+
+SCALAR = dict(VECTORIZED)
+SCALAR.update({
+    "vote_all": scalar_vote_all,
+    "vote_any": scalar_vote_any,
+    "red_add": scalar_red_add,
+    "shfl_down": scalar_shfl_down,
+})
+
+
+def dispatch(func: str, simd: bool):
+    table = VECTORIZED if simd else SCALAR
+    if func not in table:
+        raise CoxUnsupported(f"unknown warp collective {func}")
+    return table[func]

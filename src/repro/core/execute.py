@@ -1,0 +1,618 @@
+"""Two-level vectorized executor for hierarchically-collapsed kernels.
+
+Generated-code shape (paper Code 3):
+
+    for each block-level PR:                 # block machine node
+        for wid in range(n_warps):           # inter-warp loop
+            run the PR's warp-level machine  # warp PRs + peeled branches
+              — every warp PR evaluates all W lanes at once (intra-warp
+                "loop" == the vector lane axis; AVX in the paper, VPU
+                lanes on TPU, XLA-vectorized on CPU)
+
+Loop peeling (paper §3.3.1 / Code 3 line 10): branch conditions are
+evaluated by *all* lanes (side effects preserved) but the branch
+direction is taken from lane 0 (warp level) or warp 0 lane 0 (block
+level) — sound under the aligned-barrier assumption.
+
+Modes:
+* ``jit``    — inter-warp loops unrolled at trace time (block size burned
+               in; the paper's JIT mode, Fig. 13) and static-trip
+               predicated loops unrolled;
+* ``normal`` — `lax.fori_loop` inter-warp loop, one trace serves any
+               grid; block size still static per JAX shape rules (the
+               runtime-configuration analogue).
+
+``simd=False`` switches warp collectives to per-lane loop emulation
+(Table 2's "w/o AVX" baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import collectives
+from . import kernel_ir as K
+from .cfg import CFG, Br, Jmp, Ret, WarpBufCompute, WarpBufStore
+from .frontend import parse_kernel
+from .lower import lower_kernel
+from .passes import (insert_extra_barriers, lower_warp_intrinsics,
+                     split_blocks_at_barriers)
+from .regions import (EXIT, BlockPR, BlockPeel, Machine, WarpPR, WarpPeel,
+                      build_machine, replication_classes)
+from .typeinfer import infer
+from .types import (ArraySpec, BarrierLevel, CoxUnsupported, DType,
+                    ScalarSpec, SharedSpec)
+
+_UNROLL_LIMIT = 64  # static-trip predicated loops up to this are unrolled in jit mode
+
+
+def _prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CompiledKernel:
+    """Result of the full pass pipeline, ready to stage into JAX."""
+    kernel: K.Kernel
+    cfg: CFG
+    machine: Machine
+    var_types: Dict[str, DType]
+    classes: Dict[str, str]            # var -> 'block' | 'warp'
+    warp_bufs: Dict[str, DType]
+    warp_size: int
+
+    @property
+    def array_params(self) -> List[ArraySpec]:
+        return [p for p in self.kernel.params if isinstance(p, ArraySpec)]
+
+    @property
+    def scalar_params(self) -> List[ScalarSpec]:
+        return [p for p in self.kernel.params if isinstance(p, ScalarSpec)]
+
+    def summary(self) -> str:
+        n_bpr = sum(isinstance(n, BlockPR) for n in self.machine.nodes)
+        n_wpr = sum(
+            sum(isinstance(w, WarpPR) for w in n.warp.nodes)
+            for n in self.machine.nodes if isinstance(n, BlockPR))
+        return (f"kernel {self.kernel.name}: {len(self.cfg.blocks)} blocks, "
+                f"{n_bpr} block-level PRs, {n_wpr} warp-level PRs, "
+                f"{len([v for v, c in self.classes.items() if c == 'block'])} "
+                f"block-replicated vars")
+
+
+def compile_kernel(kernel: K.Kernel, warp_size: int = 32) -> CompiledKernel:
+    """Run the hierarchical-collapsing pipeline (paper Fig. 4 steps 1-5)."""
+    var_types = infer(kernel)
+    cfg = lower_kernel(kernel)
+    warp_bufs = lower_warp_intrinsics(cfg, var_types)
+    for b, dt in warp_bufs.items():
+        var_types[b] = dt
+    insert_extra_barriers(cfg)
+    split_blocks_at_barriers(cfg)
+    cfg.verify()
+    machine = build_machine(cfg)
+    uniforms = {p.name for p in kernel.params if isinstance(p, ScalarSpec)}
+    for u in uniforms:  # scalar params are block-uniform, never replicated
+        var_types.pop(u, None)
+    classes = replication_classes(machine, uniforms)
+    # every var assigned anywhere must have a class; default to warp-local
+    for v in var_types:
+        classes.setdefault(v, "warp")
+    return CompiledKernel(kernel, cfg, machine, var_types, classes,
+                          warp_bufs, warp_size)
+
+
+# ---------------------------------------------------------------------------
+# Environment
+# ---------------------------------------------------------------------------
+
+
+class _Env:
+    """Mutable view over the machine state for one (block, warp) context."""
+
+    def __init__(self, ck: CompiledKernel, *, wid, n_warps: int,
+                 uniforms: Dict[str, Any], warp_vars: Dict[str, Any],
+                 block_vars: Dict[str, Any], shmem: Dict[str, Any],
+                 globals_: Dict[str, Any], simd: bool,
+                 multi_device: bool = False,
+                 store_masks: Optional[Dict[str, Any]] = None,
+                 atomic_deltas: Optional[Dict[str, Any]] = None):
+        self.ck = ck
+        self.W = ck.warp_size
+        self.wid = wid
+        self.n_warps = n_warps
+        self.uniforms = uniforms
+        # Pre-allocate every warp-replicated local so lax control-flow
+        # carries have a stable pytree structure.
+        if not warp_vars:
+            warp_vars = {
+                v: jnp.zeros((self.W,), ck.var_types.get(v, DType.f32).jnp)
+                for v, c in ck.classes.items()
+                if c == "warp" and v not in uniforms}
+        self.warp_vars = warp_vars
+        self.block_vars = block_vars
+        self.shmem = shmem
+        self.globals = globals_
+        self.simd = simd
+        self.multi_device = multi_device
+        self.store_masks = store_masks if store_masks is not None else {}
+        self.atomic_deltas = atomic_deltas if atomic_deltas is not None else {}
+        self.lane = jnp.arange(self.W, dtype=jnp.int32)
+
+    @property
+    def base_mask(self):
+        tid = jnp.asarray(self.wid, jnp.int32) * self.W + self.lane
+        return tid < jnp.asarray(self.uniforms["bdim"], jnp.int32)
+
+    # ---------------- state snapshot (for lax control flow) ----------------
+
+    def state(self) -> Dict[str, Any]:
+        return {"wv": dict(self.warp_vars), "bv": dict(self.block_vars),
+                "sh": dict(self.shmem), "g": dict(self.globals),
+                "sm": dict(self.store_masks), "ad": dict(self.atomic_deltas)}
+
+    def load(self, st: Dict[str, Any]):
+        self.warp_vars = dict(st["wv"])
+        self.block_vars = dict(st["bv"])
+        self.shmem = dict(st["sh"])
+        self.globals = dict(st["g"])
+        self.store_masks = dict(st["sm"])
+        self.atomic_deltas = dict(st["ad"])
+
+    # ---------------- variables ----------------
+
+    def _dtype(self, name: str) -> DType:
+        return self.ck.var_types.get(name, DType.f32)
+
+    def read_var(self, name: str):
+        if name in self.uniforms:
+            return jnp.asarray(self.uniforms[name])
+        cls = self.ck.classes.get(name, "warp")
+        if cls == "warp":
+            return self.warp_vars[name]
+        return self.block_vars[name][self.wid]
+
+    def write_var(self, name: str, value, mask=None):
+        dt = self._dtype(name).jnp
+        value = jnp.broadcast_to(jnp.asarray(value).astype(dt), (self.W,))
+        if mask is not None:
+            value = jnp.where(mask, value, self.read_var(name))
+        cls = self.ck.classes.get(name, "warp")
+        if cls == "warp":
+            self.warp_vars[name] = value
+        else:
+            self.block_vars[name] = self.block_vars[name].at[self.wid].set(value)
+
+
+# ---------------------------------------------------------------------------
+# Expression evaluation (vectorized across the warp's lanes)
+# ---------------------------------------------------------------------------
+
+_BINOPS = {
+    "+": jnp.add, "-": jnp.subtract, "*": jnp.multiply,
+    "%": jnp.remainder, "&": None, "|": None, "^": None,
+    "<<": jnp.left_shift, ">>": jnp.right_shift,
+    "min": jnp.minimum, "max": jnp.maximum,
+}
+
+_CMPS = {"<": jnp.less, "<=": jnp.less_equal, ">": jnp.greater,
+         ">=": jnp.greater_equal, "==": jnp.equal, "!=": jnp.not_equal}
+
+
+def eval_expr(e: K.Expr, env: _Env):
+    if isinstance(e, K.Const):
+        return jnp.asarray(e.value, (e.dtype or DType.f32).jnp)
+    if isinstance(e, K.Var):
+        return env.read_var(e.name)
+    if isinstance(e, K.Special):
+        if e.kind == "tid":
+            return jnp.asarray(env.wid, jnp.int32) * env.W + env.lane
+        if e.kind == "lane":
+            return env.lane
+        if e.kind == "wid":
+            return jnp.broadcast_to(jnp.asarray(env.wid, jnp.int32), (env.W,))
+        if e.kind == "wsize":
+            return jnp.asarray(env.W, jnp.int32)
+        return jnp.asarray(env.uniforms[e.kind], jnp.int32)  # bid/bdim/gdim
+    if isinstance(e, K.BinOp):
+        a, b = eval_expr(e.lhs, env), eval_expr(e.rhs, env)
+        if e.op == "/":
+            return jnp.true_divide(a.astype(jnp.float32), b.astype(jnp.float32)) \
+                if not (jnp.issubdtype(a.dtype, jnp.floating)
+                        or jnp.issubdtype(b.dtype, jnp.floating)) \
+                else jnp.true_divide(a, b)
+        if e.op == "//":
+            return jnp.floor_divide(a, b)
+        if e.op in ("&", "|", "^"):
+            if a.dtype == jnp.bool_ or b.dtype == jnp.bool_:
+                f = {"&": jnp.logical_and, "|": jnp.logical_or,
+                     "^": jnp.logical_xor}[e.op]
+                return f(a, b)
+            f = {"&": jnp.bitwise_and, "|": jnp.bitwise_or,
+                 "^": jnp.bitwise_xor}[e.op]
+            return f(a, b)
+        return _BINOPS[e.op](a, b)
+    if isinstance(e, K.CmpOp):
+        return _CMPS[e.op](eval_expr(e.lhs, env), eval_expr(e.rhs, env))
+    if isinstance(e, K.BoolOp):
+        vals = [eval_expr(a, env).astype(jnp.bool_) for a in e.args]
+        out = vals[0]
+        for v in vals[1:]:
+            out = jnp.logical_and(out, v) if e.op == "and" else jnp.logical_or(out, v)
+        return out
+    if isinstance(e, K.UnOp):
+        v = eval_expr(e.operand, env)
+        if e.op == "neg":
+            return -v
+        if e.op == "not":
+            return jnp.logical_not(v.astype(jnp.bool_))
+        if e.op == "abs":
+            return jnp.abs(v)
+        if e.op in ("f32", "i32", "f16", "bf16", "u32"):
+            return v.astype(DType(e.op).jnp)
+        if e.op == "rsqrt":
+            return lax.rsqrt(v.astype(jnp.float32))
+        if e.op == "sigmoid":
+            return jax.nn.sigmoid(v.astype(jnp.float32))
+        fn = {"exp": jnp.exp, "log": jnp.log, "sqrt": jnp.sqrt,
+              "tanh": jnp.tanh, "floor": jnp.floor}[e.op]
+        return fn(v.astype(jnp.float32) if v.dtype in
+                  (jnp.int32, jnp.bool_) else v)
+    if isinstance(e, K.Select):
+        return jnp.where(eval_expr(e.cond, env).astype(jnp.bool_),
+                         eval_expr(e.on_true, env), eval_expr(e.on_false, env))
+    if isinstance(e, K.LoadGlobal):
+        idx = eval_expr(e.index, env).astype(jnp.int32)
+        arr = env.globals[e.array]
+        val = arr.at[idx].get(mode="fill", fill_value=0)
+        if env.multi_device and e.array in env.atomic_deltas:
+            val = val + env.atomic_deltas[e.array].at[idx].get(
+                mode="fill", fill_value=0)
+        return val
+    if isinstance(e, K.LoadShared):
+        idx = eval_expr(e.index, env).astype(jnp.int32)
+        return env.shmem[e.array].at[idx].get(mode="fill", fill_value=0)
+    raise CoxUnsupported(f"cannot evaluate {e!r}")
+
+
+# ---------------------------------------------------------------------------
+# Instruction execution (with predication masks for barrier-free divergence)
+# ---------------------------------------------------------------------------
+
+
+def _store_mask(env: _Env, mask):
+    m = env.base_mask
+    return m if mask is None else (m & mask)
+
+
+def _safe_idx(idx, m, size):
+    idx = jnp.broadcast_to(idx.astype(jnp.int32), m.shape)
+    return jnp.where(m, idx, jnp.int32(size))  # size == one-past-end → dropped
+
+
+def exec_instrs(instrs: List, env: _Env, mask, *, jit_mode: bool):
+    for ins in instrs:
+        exec_instr(ins, env, mask, jit_mode=jit_mode)
+
+
+def exec_instr(ins, env: _Env, mask, *, jit_mode: bool):
+    if isinstance(ins, K.Assign):
+        env.write_var(ins.name, eval_expr(ins.value, env), mask)
+    elif isinstance(ins, K.StoreGlobal):
+        m = _store_mask(env, mask)
+        arr = env.globals[ins.array]
+        idx = _safe_idx(eval_expr(ins.index, env), m, arr.shape[0])
+        val = jnp.broadcast_to(
+            jnp.asarray(eval_expr(ins.value, env)).astype(arr.dtype), m.shape)
+        env.globals[ins.array] = arr.at[idx].set(val, mode="drop")
+        if env.multi_device:
+            sm = env.store_masks[ins.array]
+            env.store_masks[ins.array] = sm.at[idx].set(True, mode="drop")
+    elif isinstance(ins, K.StoreShared):
+        m = _store_mask(env, mask)
+        arr = env.shmem[ins.array]
+        idx = _safe_idx(eval_expr(ins.index, env), m, arr.shape[0])
+        val = jnp.broadcast_to(
+            jnp.asarray(eval_expr(ins.value, env)).astype(arr.dtype), m.shape)
+        env.shmem[ins.array] = arr.at[idx].set(val, mode="drop")
+    elif isinstance(ins, K.AtomicRMW):
+        m = _store_mask(env, mask)
+        if env.multi_device:
+            tgt = env.atomic_deltas[ins.array]
+        else:
+            tgt = env.globals[ins.array]
+        idx = _safe_idx(eval_expr(ins.index, env), m, tgt.shape[0])
+        val = jnp.broadcast_to(
+            jnp.asarray(eval_expr(ins.value, env)).astype(tgt.dtype), m.shape)
+        if ins.dst:
+            old = tgt.at[jnp.where(m, idx, 0)].get(mode="fill", fill_value=0)
+            env.write_var(ins.dst, old, mask)
+        if ins.op == "add":
+            new = tgt.at[idx].add(val, mode="drop")
+        elif ins.op == "max":
+            new = tgt.at[idx].max(val, mode="drop")
+        else:
+            new = tgt.at[idx].min(val, mode="drop")
+        if env.multi_device:
+            env.atomic_deltas[ins.array] = new
+        else:
+            env.globals[ins.array] = new
+    elif isinstance(ins, K.Barrier):
+        pass  # structural only — ordering is preserved by lane vectorization
+    elif isinstance(ins, WarpBufStore):
+        if mask is not None:
+            raise CoxUnsupported(
+                "warp collective inside divergent (predicated) control flow — "
+                "dynamic-mask collectives are outside the supported set "
+                "(paper §2.2.3)")
+        env.write_var(ins.buf, eval_expr(ins.value, env), None)
+    elif isinstance(ins, WarpBufCompute):
+        if mask is not None:
+            raise CoxUnsupported("warp collective inside divergent control flow")
+        buf = env.read_var(ins.buf)
+        fn = collectives.dispatch(ins.func, env.simd)
+        extra = [eval_expr(a, env) for a in ins.args]
+        res = fn(buf, *extra, W=env.W, width=ins.width, mask=env.base_mask)
+        env.write_var(ins.dst, res, None)
+    elif isinstance(ins, K.If):
+        cond = eval_expr(ins.cond, env).astype(jnp.bool_)
+        cond = jnp.broadcast_to(cond, (env.W,))
+        m_t = cond if mask is None else (mask & cond)
+        exec_instrs(ins.then_body, env, m_t, jit_mode=jit_mode)
+        if ins.else_body:
+            m_f = ~cond if mask is None else (mask & ~cond)
+            exec_instrs(ins.else_body, env, m_f, jit_mode=jit_mode)
+    elif isinstance(ins, K.While):
+        _exec_masked_while(ins, env, mask, jit_mode=jit_mode)
+    elif isinstance(ins, K.Return):
+        raise CoxUnsupported("return must terminate the kernel")
+    else:
+        raise CoxUnsupported(f"cannot execute {ins!r}")
+
+
+def _exec_masked_while(ins: K.While, env: _Env, mask, *, jit_mode: bool):
+    """Barrier-free loop with potentially lane-divergent trip counts:
+    iterate while any lane is active, with per-lane masking (the
+    whole-function-vectorization treatment of divergent loops)."""
+    if jit_mode and ins.static_trip is not None and ins.static_trip <= _UNROLL_LIMIT:
+        for _ in range(ins.static_trip):
+            cond = jnp.broadcast_to(
+                eval_expr(ins.cond, env).astype(jnp.bool_), (env.W,))
+            m = cond if mask is None else (mask & cond)
+            exec_instrs(ins.body, env, m, jit_mode=jit_mode)
+        return
+
+    mask_in = jnp.ones((env.W,), jnp.bool_) if mask is None else mask
+
+    def active(st) -> Any:
+        env.load(st)
+        cond = jnp.broadcast_to(
+            eval_expr(ins.cond, env).astype(jnp.bool_), (env.W,))
+        return mask_in & cond
+
+    def cond_f(st):
+        return jnp.any(active(st))
+
+    def body_f(st):
+        m = active(st)  # load(st) happened inside
+        exec_instrs(ins.body, env, m, jit_mode=jit_mode)
+        return env.state()
+
+    st = lax.while_loop(cond_f, body_f, env.state())
+    env.load(st)
+
+
+# ---------------------------------------------------------------------------
+# Warp-level machine (runs one warp through one block-level PR)
+# ---------------------------------------------------------------------------
+
+
+def _peel0(v):
+    return v[0].astype(jnp.bool_)
+
+
+def run_warp_graph(node: BlockPR, env: _Env, *, jit_mode: bool):
+    """Execute the block-level PR's warp-level region graph for env.wid.
+    Returns the exit index (which block-level successor to take)."""
+    g = node.warp
+    linear = _try_linear(g)
+    if linear is not None:
+        for wnode in linear:
+            exec_instrs_of_warp_pr(wnode, env, jit_mode=jit_mode)
+        return jnp.asarray(linear[-1].succ[1], jnp.int32)
+
+    # general case: PC-dispatch machine
+    EXITPC = len(g.nodes)
+
+    def mk_fn(wnode):
+        def fn(st):
+            env.load(st["env"])
+            if isinstance(wnode, WarpPR):
+                exec_instrs_of_warp_pr(wnode, env, jit_mode=jit_mode)
+                kind, val = wnode.succ
+                if kind == "node":
+                    pc, ex = jnp.int32(val), st["exit_ix"]
+                else:
+                    pc, ex = jnp.int32(EXITPC), jnp.int32(val)
+            else:  # WarpPeel — loop peeling: lane 0 decides (paper §3.3.1)
+                flag = _peel0(env.read_var(wnode.cond))
+                def enc(tgt):
+                    kind, val = tgt
+                    if kind == "node":
+                        return jnp.int32(val), st["exit_ix"]
+                    return jnp.int32(EXITPC), jnp.int32(val)
+                tp, te = enc(wnode.on_true)
+                fp, fe = enc(wnode.on_false)
+                pc = jnp.where(flag, tp, fp)
+                ex = jnp.where(flag, te, fe)
+            return {"pc": pc, "exit_ix": ex, "env": env.state()}
+        return fn
+
+    fns = [mk_fn(w) for w in g.nodes]
+
+    def cond_f(st):
+        return st["pc"] != EXITPC
+
+    def body_f(st):
+        return lax.switch(jnp.clip(st["pc"], 0, EXITPC - 1), fns, st)
+
+    st0 = {"pc": jnp.int32(g.entry), "exit_ix": jnp.int32(0), "env": env.state()}
+    st = lax.while_loop(cond_f, body_f, st0)
+    env.load(st["env"])
+    return st["exit_ix"]
+
+
+def exec_instrs_of_warp_pr(wnode: WarpPR, env: _Env, *, jit_mode: bool):
+    for bname in wnode.blocks:
+        exec_instrs(env.ck.cfg.blocks[bname].instrs, env, None, jit_mode=jit_mode)
+
+
+def _try_linear(g) -> Optional[List[WarpPR]]:
+    """Fast path: the warp graph is a pure chain of PRs ending at exit 0
+    (no peels, no cycles) — the shape every warp-feature-free PR has."""
+    out: List[WarpPR] = []
+    seen = set()
+    cur = g.entry
+    while True:
+        node = g.nodes[cur]
+        if not isinstance(node, WarpPR) or cur in seen:
+            return None
+        seen.add(cur)
+        out.append(node)
+        kind, val = node.succ
+        if kind == "exit":
+            return out
+        cur = val
+
+
+# ---------------------------------------------------------------------------
+# Block-level machine
+# ---------------------------------------------------------------------------
+
+
+def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
+                  simd: bool = True, multi_device: bool = False):
+    """Build ``f(uniforms, globals[, masks, deltas]) -> (globals, masks,
+    deltas)`` executing one CUDA block.  ``uniforms`` must contain bid,
+    bdim, gdim and every scalar kernel parameter."""
+    jit_mode = mode == "jit"
+    W = ck.warp_size
+    has_atomics = any(isinstance(s, K.AtomicRMW) for s in _all_instrs(ck))
+
+    def block_fn(uniforms: Dict[str, Any], globals_: Dict[str, Any],
+                 store_masks=None, atomic_deltas=None):
+        block_vars = {
+            v: jnp.zeros((n_warps, W), ck.var_types.get(v, DType.f32).jnp)
+            for v, c in ck.classes.items() if c == "block"}
+        shmem = {s.name: jnp.zeros((_prod(s.shape),), s.dtype.jnp)
+                 for s in ck.kernel.shared}
+        if multi_device:
+            store_masks = store_masks if store_masks is not None else {
+                k: jnp.zeros(v.shape, jnp.bool_) for k, v in globals_.items()}
+            atomic_deltas = atomic_deltas if atomic_deltas is not None else ({
+                k: jnp.zeros_like(v) for k, v in globals_.items()}
+                if has_atomics else {})
+        else:
+            store_masks, atomic_deltas = {}, {}
+
+        def run_block_pr(node: BlockPR, bv, sh, g, sm, ad):
+            """One inter-warp loop (paper's Code 3 outer loop)."""
+            def one_warp(wid, carry):
+                bv, sh, g, sm, ad, _ = carry
+                env = _Env(ck, wid=wid, n_warps=n_warps, uniforms=uniforms,
+                           warp_vars={}, block_vars=bv, shmem=sh, globals_=g,
+                           simd=simd, multi_device=multi_device,
+                           store_masks=sm, atomic_deltas=ad)
+                ex = run_warp_graph(node, env, jit_mode=jit_mode)
+                return (env.block_vars, env.shmem, env.globals,
+                        env.store_masks, env.atomic_deltas, ex)
+
+            init = (bv, sh, g, sm, ad, jnp.int32(0))
+            if jit_mode:
+                carry = init
+                for wid in range(n_warps):
+                    carry = one_warp(wid, carry)
+            else:
+                carry = lax.fori_loop(0, n_warps, one_warp, init)
+            bv, sh, g, sm, ad, ex = carry
+            succ = jnp.asarray(
+                [EXIT if s == EXIT else s for s in node.succ_ids] or [EXIT],
+                jnp.int32)
+            nxt = succ[jnp.clip(ex, 0, len(node.succ_ids) - 1)] \
+                if node.succ_ids else jnp.int32(EXIT)
+            return nxt, bv, sh, g, sm, ad
+
+        nodes = ck.machine.nodes
+        linear = _try_linear_block(ck.machine)
+        if linear is not None:
+            bv, sh, g, sm, ad = block_vars, shmem, globals_, store_masks, atomic_deltas
+            for node in linear:
+                _, bv, sh, g, sm, ad = run_block_pr(node, bv, sh, g, sm, ad)
+            return g, sm, ad
+
+        # general PC machine at block level
+        def mk_fn(node):
+            def fn(st):
+                bv, sh, g, sm, ad = (st["bv"], st["sh"], st["g"],
+                                     st["sm"], st["ad"])
+                if isinstance(node, BlockPR):
+                    nxt, bv, sh, g, sm, ad = run_block_pr(node, bv, sh, g, sm, ad)
+                else:  # BlockPeel — warp 0 lane 0 decides
+                    flag = bv[node.cond][0, 0].astype(jnp.bool_)
+                    nxt = jnp.where(flag, jnp.int32(node.t_id),
+                                    jnp.int32(node.f_id))
+                return {"pc": nxt, "bv": bv, "sh": sh, "g": g, "sm": sm,
+                        "ad": ad}
+            return fn
+
+        fns = [mk_fn(n) for n in nodes]
+        st0 = {"pc": jnp.int32(ck.machine.entry), "bv": block_vars,
+               "sh": shmem, "g": globals_, "sm": store_masks,
+               "ad": atomic_deltas}
+        st = lax.while_loop(
+            lambda s: s["pc"] != jnp.int32(EXIT),
+            lambda s: lax.switch(jnp.clip(s["pc"], 0, len(fns) - 1), fns, s),
+            st0)
+        return st["g"], st["sm"], st["ad"]
+
+    return block_fn
+
+
+def _try_linear_block(machine: Machine) -> Optional[List[BlockPR]]:
+    out: List[BlockPR] = []
+    seen = set()
+    cur = machine.entry
+    while cur != EXIT:
+        node = machine.nodes[cur]
+        if not isinstance(node, BlockPR) or cur in seen:
+            return None
+        if len(set(node.succ_ids)) > 1:
+            return None
+        seen.add(cur)
+        out.append(node)
+        cur = node.succ_ids[0] if node.succ_ids else EXIT
+    return out
+
+
+def _all_instrs(ck: CompiledKernel):
+    for blk in ck.cfg.blocks.values():
+        stack = list(blk.instrs)
+        while stack:
+            s = stack.pop()
+            yield s
+            if isinstance(s, K.If):
+                stack.extend(s.then_body)
+                stack.extend(s.else_body)
+            elif isinstance(s, K.While):
+                stack.extend(s.body)

@@ -1,0 +1,64 @@
+"""Flat collapsing — the prior-art baseline (MCUDA / POCL / DPC semantics,
+paper §2.1) and the hybrid dispatcher (paper §5.2.1).
+
+Flat collapsing wraps each (block-level) Parallel Region in a single loop
+of length block_size.  It is realized here by running the hierarchical
+pipeline with ``warp_size == block_size`` (one "warp" covering the whole
+block): the inter-warp loop degenerates to one iteration and every PR is
+a single vectorized loop — exactly the flat output shape, Fig. 1(b).
+
+Faithful to the coverage story (Table 1), flat collapsing REJECTS kernels
+that use warp-level features: a single block-wide loop cannot represent
+warp-scoped barriers (the paper's Code 2 shows why patching them in is
+intractable).  ``supports_flat`` is the feature detector; hybrid mode
+uses flat when possible (it is ~13% faster on warp-free kernels, Fig. 12)
+and hierarchical collapsing otherwise.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from . import kernel_ir as K
+from .types import BarrierLevel, CoxUnsupported
+
+
+class FlatUnsupported(CoxUnsupported):
+    """The kernel needs hierarchical collapsing (warp-level features)."""
+
+
+def flat_rejection_reason(kernel: K.Kernel) -> Optional[str]:
+    """Why flat collapsing cannot compile this kernel (None = it can).
+    Mirrors the ✗ rows of the paper's Table 1 for POCL-class frameworks."""
+    for s in kernel.walk():
+        if isinstance(s, K.WarpCall):
+            if s.width and s.width != 32:
+                return (f"static cooperative-group tile<{s.width}> "
+                        f"({s.func}) — sub-warp collective")
+            return f"warp-level collective {s.func} (implicit warp barriers)"
+        if isinstance(s, K.Barrier) and s.level == BarrierLevel.WARP:
+            return "explicit __syncwarp() — warp-scoped barrier"
+    return None
+
+
+def supports_flat(kernel: K.Kernel) -> bool:
+    return flat_rejection_reason(kernel) is None
+
+
+def check_flat(kernel: K.Kernel):
+    reason = flat_rejection_reason(kernel)
+    if reason is not None:
+        raise FlatUnsupported(
+            f"flat collapsing cannot express kernel '{kernel.name}': {reason}")
+
+
+def choose_collapse(kernel: K.Kernel, requested: str = "hybrid") -> str:
+    """'hybrid' (default, paper §5.2.1): flat when the kernel has no
+    warp-level features, hierarchical otherwise."""
+    if requested == "flat":
+        check_flat(kernel)
+        return "flat"
+    if requested == "hier":
+        return "hier"
+    if requested != "hybrid":
+        raise ValueError(f"unknown collapse mode {requested}")
+    return "flat" if supports_flat(kernel) else "hier"

@@ -1,0 +1,126 @@
+"""Shared types for the COX core compiler.
+
+The paper (COX, Han et al. 2021) transforms NVVM IR; we transform a
+structured kernel IR produced by a Python-AST frontend.  Dtypes are the
+small set CUDA kernels in the paper's benchmarks use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+WARP_SIZE = 32  # CUDA warpSize; configurable per-compile (TPU-native = 128 lanes)
+
+
+class CoxUnsupported(Exception):
+    """Raised when a kernel uses a feature outside the supported set.
+
+    Mirrors the paper's coverage gaps: dynamic cooperative groups,
+    grid/multi-grid sync, non-aligned barriers (Table 1 "X" rows).
+    """
+
+
+class CoxTypeError(Exception):
+    pass
+
+
+class DType(enum.Enum):
+    f32 = "f32"
+    f16 = "f16"
+    bf16 = "bf16"
+    i32 = "i32"
+    i64 = "i64"
+    u32 = "u32"
+    b1 = "b1"  # predicate / bool
+
+    @property
+    def jnp(self):
+        return {
+            DType.f32: jnp.float32,
+            DType.f16: jnp.float16,
+            DType.bf16: jnp.bfloat16,
+            DType.i32: jnp.int32,
+            DType.i64: jnp.int64,
+            DType.u32: jnp.uint32,
+            DType.b1: jnp.bool_,
+        }[self]
+
+    @property
+    def is_float(self) -> bool:
+        return self in (DType.f32, DType.f16, DType.bf16)
+
+    @property
+    def is_int(self) -> bool:
+        return self in (DType.i32, DType.i64, DType.u32)
+
+
+def from_jnp(dt) -> DType:
+    dt = jnp.dtype(dt)
+    table = {
+        jnp.dtype(jnp.float32): DType.f32,
+        jnp.dtype(jnp.float16): DType.f16,
+        jnp.dtype(jnp.bfloat16): DType.bf16,
+        jnp.dtype(jnp.int32): DType.i32,
+        jnp.dtype(jnp.int64): DType.i64,
+        jnp.dtype(jnp.uint32): DType.u32,
+        jnp.dtype(jnp.bool_): DType.b1,
+    }
+    if dt not in table:
+        raise CoxTypeError(f"unsupported dtype {dt}")
+    return table[dt]
+
+
+def promote(a: DType, b: DType) -> DType:
+    """C-style arithmetic promotion over our small lattice."""
+    if a == b:
+        return a
+    order = [DType.b1, DType.i32, DType.u32, DType.i64, DType.bf16, DType.f16, DType.f32]
+    # float beats int; f32 is the top float.
+    if a.is_float or b.is_float:
+        floats = [d for d in (a, b) if d.is_float]
+        if len(floats) == 2 and floats[0] != floats[1]:
+            return DType.f32
+        return floats[0] if len(floats) == 1 else floats[0]
+    return order[max(order.index(a), order.index(b))]
+
+
+class BarrierLevel(enum.Enum):
+    """Hierarchy of barrier scopes — the paper's central distinction."""
+    WARP = "warp"    # __syncwarp() / implicit from warp collectives (RAW/WAR)
+    BLOCK = "block"  # __syncthreads()
+
+    def __ge__(self, other: "BarrierLevel") -> bool:  # BLOCK subsumes WARP
+        return self == BarrierLevel.BLOCK or self == other
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySpec:
+    """A kernel parameter backed by global memory."""
+    name: str
+    dtype: DType
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalarSpec:
+    """A kernel parameter passed by value (block-uniform)."""
+    name: str
+    dtype: DType
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedSpec:
+    """A __shared__ array declaration (per-block)."""
+    name: str
+    shape: tuple
+    dtype: DType
+
+
+ParamSpec = Any  # ArraySpec | ScalarSpec
+
+
+def _fmt_args(args: Sequence[Any]) -> str:
+    return ", ".join(str(a) for a in args)

@@ -1,0 +1,94 @@
+"""Kernel dispatch layer: jit'd wrappers selecting Pallas vs XLA (ref).
+
+Policy:
+* ``backend="pallas"``  — compiled Pallas TPU kernels (real hardware);
+* ``backend="interpret"`` — Pallas interpret mode (CPU validation; the
+  kernel *body* runs, slowly, through XLA);
+* ``backend="xla"``     — the pure-jnp reference math (used by the model
+  stack for CPU dry-runs: identical numerics, compact HLO);
+* ``backend="auto"``    — pallas on TPU, xla elsewhere.
+
+This is the hook the §Perf iterations toggle per-op.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import norms as _norms
+from . import ref as _ref
+from . import softmax as _sm
+from . import ssd_scan as _ssd
+from . import warp_reduce as _wr
+
+_DEFAULT = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+
+
+def resolve(backend: str = "auto") -> str:
+    if backend == "auto":
+        backend = _DEFAULT
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
+
+
+def softmax(x, backend: str = "auto"):
+    b = resolve(backend)
+    if b == "xla":
+        return _ref.softmax(x)
+    return _sm.softmax(x, interpret=(b == "interpret"))
+
+
+def rmsnorm(x, w, eps: float = 1e-6, backend: str = "auto"):
+    b = resolve(backend)
+    if b == "xla":
+        return _ref.rmsnorm(x, w, eps)
+    return _norms.rmsnorm(x, w, eps=eps, interpret=(b == "interpret"))
+
+
+def layernorm(x, w, bias, eps: float = 1e-6, backend: str = "auto"):
+    b = resolve(backend)
+    if b == "xla":
+        return _ref.layernorm(x, w, bias, eps)
+    return _norms.layernorm(x, w, bias, eps=eps, interpret=(b == "interpret"))
+
+
+def row_reduce(x, op: str = "sum", backend: str = "auto"):
+    b = resolve(backend)
+    if b == "xla":
+        return _ref.row_reduce(x, op)
+    return _wr.row_reduce(x, op, interpret=(b == "interpret"))
+
+
+def attention(q, k, v, causal: bool = True, window: int = 0,
+              backend: str = "auto"):
+    b = resolve(backend)
+    if b == "xla":
+        return _ref.attention(q, k, v, causal=causal, window=window)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=(b == "interpret"))
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, backend: str = "auto"):
+    b = resolve(backend)
+    if b == "xla":
+        return _ref.decode_attention(q, k_cache, v_cache, kv_len)
+    return _fa.flash_decode(q, k_cache, v_cache, kv_len,
+                            interpret=(b == "interpret"))
+
+
+def ssd_scan(x, a, bmat, cmat, chunk: int = 128, backend: str = "auto"):
+    b = resolve(backend)
+    if b == "xla":
+        # chunked dual form: same math, production XLA path
+        return _ref.ssd_scan_chunked(x, a, bmat, cmat, chunk=chunk)
+    return _ssd.ssd_scan(x, a, bmat, cmat, chunk=chunk,
+                         interpret=(b == "interpret"))
+
+
+def topk_gate(logits, k: int):
+    return _ref.topk_gate(logits, k)

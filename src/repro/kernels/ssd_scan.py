@@ -1,0 +1,86 @@
+"""Mamba2 SSD (state-space duality) chunked scan kernel.
+
+COX mapping: the chunk loop is the *inter-warp loop* (sequential grid
+dimension carrying the (N, P) state in VMEM scratch — the role of the
+paper's replicated cross-PR variables); intra-chunk work is the
+*intra-warp* part, done as dense MXU matmuls via the SSD dual form:
+
+    y_intra = ((C Bᵀ) ⊙ L) X          L[i,j] = exp(A_i − A_j)·[i ≥ j]
+    y_inter = exp(A) ⊙ (C h_in)
+    h_out   = exp(A_C) h_in + (B ⊙ exp(A_C − A))ᵀ X
+
+with A the within-chunk cumulative log-decay (A_C its total).  a ≤ 0
+(decay), so every exponent is ≤ 0 — numerically safe.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, compiler_params, vmem_scratch
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *, chunk: int):
+    h, ci = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[:, 0, :].astype(jnp.float32)        # (C, P)
+    a = a_ref[:, 0].astype(jnp.float32)           # (C,)
+    b = b_ref[...].astype(jnp.float32)            # (C, N)
+    c = c_ref[...].astype(jnp.float32)            # (C, N)
+
+    A = jnp.cumsum(a)                             # within-chunk log decay
+    A_total = A[-1]
+
+    # intra-chunk (dual/matmul form — MXU work)
+    i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    # mask the exponent before exp (overflow hygiene; see ref.py)
+    L = jnp.exp(jnp.where(i >= j, A[:, None] - A[None, :], -jnp.inf))
+    s = (c @ b.T) * L                             # (C, C)
+    y = s @ x                                     # (C, P)
+
+    # inter-chunk contribution from carried state
+    h_in = h_scr[...]                             # (N, P)
+    y = y + jnp.exp(A)[:, None] * (c @ h_in)
+
+    # state update for the next chunk
+    w = b * jnp.exp(A_total - A)[:, None]         # (C, N)
+    h_scr[...] = jnp.exp(A_total) * h_in + w.T @ x
+
+    y_ref[:, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, a, b, c, *, chunk: int = DEFAULT_CHUNK,
+             interpret: bool = True):
+    """x: (S, H, P); a: (S, H); b, c: (S, N) -> y: (S, H, P)."""
+    S, H, P = x.shape
+    N = b.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, "pad sequence to chunk multiple"
+    nc = S // chunk
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(H, nc),
+        in_specs=[
+            pl.BlockSpec((chunk, 1, P), lambda h, ci: (ci, h, 0)),
+            pl.BlockSpec((chunk, 1), lambda h, ci: (ci, h)),
+            pl.BlockSpec((chunk, N), lambda h, ci: (ci, 0)),
+            pl.BlockSpec((chunk, N), lambda h, ci: (ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((chunk, 1, P), lambda h, ci: (ci, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, H, P), x.dtype),
+        scratch_shapes=[vmem_scratch((N, P), jnp.float32)],
+        compiler_params=compiler_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, a, b, c)
+    return out

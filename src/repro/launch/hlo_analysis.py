@@ -1,0 +1,222 @@
+"""While-aware HLO cost attribution.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so a model
+that scans L layers under-reports FLOPs/collectives by ~L×.  This module
+parses the optimized HLO, builds the computation call graph, extracts
+each while-loop's trip count from its condition, and accumulates
+
+  * dot FLOPs          (2 · prod(out dims) · contracted size, resolved
+                        through a per-computation symbol table)
+  * collective bytes   (result-shape bytes of all-gather / all-reduce /
+                        reduce-scatter / all-to-all / collective-permute)
+  * touched bytes      (Σ instruction output bytes × 2 — a read+write
+                        traffic proxy)
+
+with multipliers along the call chain (while trip counts; call/cond/
+fusion = 1).  Validated against an unrolled-scan compile in tests.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8}
+
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_INSTR = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLEE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _dims(ty: str) -> Tuple[str, List[int]]:
+    m = _SHAPE.search(ty)
+    if not m:
+        return "f32", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _bytes_of(ty: str) -> int:
+    dt, dims = _dims(ty)
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.flops = 0.0
+        self.coll: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+        self.out_bytes = 0.0
+        self.calls: List[Tuple[str, str]] = []   # (kind, callee)
+        self.whiles: List[Tuple[str, str]] = []
+        self.cmp_consts: List[int] = []
+        self.types: Dict[str, str] = {}   # instr/param name -> type str
+
+
+def _parse_header_params(line: str, comp: Computation):
+    inside = line[line.find("(") + 1: line.rfind(")")]
+    for pm in re.finditer(r"([\w.\-]+)\s*:\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]"
+                          r"(?:\{[^}]*\})?))", inside):
+        comp.types[pm.group(1)] = pm.group(2)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if line and line[0] in "%E" and line.endswith("{") and "->" in line:
+            name = line.split()[1] if line.startswith("ENTRY") else \
+                line.split()[0]
+            name = name.lstrip("%").split("(")[0]
+            cur = Computation(name)
+            comps[cur.name] = cur
+            _parse_header_params(line, cur)
+            continue
+        if cur is None:
+            continue
+        s = line.strip()
+        m = _INSTR.match(s)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        opm = re.search(r"\b([a-z][\w\-]*)\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        ty = rhs[: opm.start()].strip()
+        cur.types[name] = ty
+        out_b = _bytes_of_all(ty)
+        # HBM-traffic proxy: only instructions at computation top level
+        # write buffers; fusion bodies are register/VMEM-resident, so the
+        # accumulator descends into fusions for flops/collectives but NOT
+        # for bytes (the fusion's own output row is counted here).
+        # Zero-copy ops and CPU-backend bf16-legalization artifacts
+        # (convert/copy) are excluded — a TPU build would not emit them.
+        if op not in ("bitcast", "bitcast-convert", "reshape", "tuple",
+                      "get-tuple-element", "parameter", "constant",
+                      "convert", "copy", "iota"):
+            cur.out_bytes += out_b
+        if op == "dot":
+            cur.flops += _dot_flops(rhs, cur)
+        elif op in _COLLECTIVES and not op_ends_done(rhs):
+            cur.coll[op] += out_b
+        if op == "while":
+            cm = re.search(r"condition=%?([\w.\-]+)", rhs)
+            bm = re.search(r"body=%?([\w.\-]+)", rhs)
+            if cm and bm:
+                cur.whiles.append((cm.group(1), bm.group(1)))
+        else:
+            kind = "fusion" if op in ("fusion", "reduce", "map", "scatter",
+                                      "sort", "reduce-window",
+                                      "select-and-scatter") else "call"
+            for cm in _CALLEE.finditer(rhs):
+                cur.calls.append((kind, cm.group(1)))
+            bm = _BRANCHES.search(rhs)
+            if bm:
+                for b in bm.group(1).split(","):
+                    cur.calls.append(("call", b.strip().lstrip("%")))
+        if op == "constant" and ty.startswith("s32[]"):
+            km = re.search(r"constant\((\d+)\)", rhs)
+            if km:
+                cur.cmp_consts.append(int(km.group(1)))
+    return comps
+
+
+def op_ends_done(rhs: str) -> bool:
+    return bool(re.search(r"\b(?:all-gather|all-reduce|reduce-scatter|"
+                          r"all-to-all|collective-permute)-done\(", rhs))
+
+
+def _bytes_of_all(ty: str) -> int:
+    """ty may be a tuple '(f32[..], f32[..])' or a single type."""
+    return sum(_bytes_of(t) for t in
+               re.findall(r"\w+\[[\d,]*\](?:\{[^}]*\})?", ty)) or 0
+
+
+def _dot_flops(rhs: str, comp: Computation) -> float:
+    tys = re.findall(r"\w+\[[\d,]*\]", rhs[: rhs.find("dot(")])
+    if not tys:
+        return 0.0
+    _, out_dims = _dims(tys[0])
+    inner = rhs[rhs.find("dot(") + 4:]
+    depth = 1
+    end = 0
+    for i, ch in enumerate(inner):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    args = [a.strip().lstrip("%") for a in inner[:end].split(",")]
+    km = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    if not args or not km:
+        return 0.0
+    lhs_ty = comp.types.get(args[0], "")
+    _, lhs_dims = _dims(lhs_ty)
+    contracted = 1
+    for ix in km.group(1).split(","):
+        if ix != "" and int(ix) < len(lhs_dims):
+            contracted *= lhs_dims[int(ix)]
+    out = 1
+    for d in out_dims:
+        out *= d
+    return 2.0 * out * contracted
+
+
+def trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None or not cond.cmp_consts:
+        return 1
+    return max(1, max(cond.cmp_consts))
+
+
+def accumulate(comps: Dict[str, Computation],
+               entry: Optional[str] = None) -> Dict[str, float]:
+    if entry is None:
+        called = set()
+        for c in comps.values():
+            called.update(n for _, n in c.calls)
+            called.update(n for pair in c.whiles for n in pair)
+        roots = [n for n in comps if n not in called]
+        entry = roots[-1] if roots else next(iter(comps))
+
+    totals = {"flops": 0.0, "coll_bytes": 0.0, "out_bytes": 0.0}
+    per_op = {k: 0.0 for k in _COLLECTIVES}
+    stack = set()
+
+    def visit(name: str, mult: float, count_bytes: bool):
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return
+        stack.add(name)
+        totals["flops"] += mult * comp.flops
+        if count_bytes:
+            totals["out_bytes"] += mult * comp.out_bytes
+        for k, v in comp.coll.items():
+            per_op[k] += mult * v
+            totals["coll_bytes"] += mult * v
+        for kind, callee in comp.calls:
+            visit(callee, mult, count_bytes and kind != "fusion")
+        for cond, body in comp.whiles:
+            t = trip_count(comps, cond)
+            visit(cond, mult * t, count_bytes)
+            visit(body, mult * t, count_bytes)
+        stack.discard(name)
+
+    visit(entry, 1.0, True)
+    totals.update({f"coll.{k}": v for k, v in per_op.items()})
+    return totals
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    return accumulate(parse_hlo(hlo_text))

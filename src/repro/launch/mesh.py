@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single-pod: 16×16 = 256 chips (v5e pod);
+multi-pod: 2×16×16 = 512 chips with a leading "pod" axis for cross-pod
+data parallelism (hierarchical DP: fast in-pod ICI, slow DCN across).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // max(data, 1)))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,71 @@
+"""``input_specs`` — ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation: this is what the dry-run
+lowers against.  For training that's {tokens, labels(, frontend)}; for
+decode it's {tokens, pos} plus the cache (built from cache_specs).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import encdec, lm
+from ..models.params import tree_abstract
+
+ENC_LEN_DECODE = 3072  # encoder memory length for enc-dec decode shapes
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            return {
+                "frontend": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                 jnp.float32),
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+        out = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if cfg.n_frontend_tokens:
+            # frontend embeds replace the first n tokens of the sequence
+            St = S - cfg.n_frontend_tokens
+            out["tokens"] = jax.ShapeDtypeStruct((B, St), jnp.int32)
+            out["labels"] = jax.ShapeDtypeStruct((B, St), jnp.int32)
+            out["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+        return out
+    # decode: one new token against a seq_len cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+def cache_abstract(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return tree_abstract(encdec.cache_specs(cfg, B, S, ENC_LEN_DECODE))
+    return tree_abstract(lm.cache_specs(cfg, B, S))
+
+
+def cache_spec_tree(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return encdec.cache_specs(cfg, B, S, ENC_LEN_DECODE)
+    return lm.cache_specs(cfg, B, S)
+
+
+def batch_pspec_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Tuple]:
+    """Logical axes for each batch input (resolved via AxisRules)."""
+    if shape.kind in ("train", "prefill"):
+        axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+        if cfg.family == "encdec" or cfg.n_frontend_tokens:
+            axes["frontend"] = ("batch", None, None)
+        return axes
+    return {"tokens": ("batch",), "pos": ("batch",)}

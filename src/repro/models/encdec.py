@@ -1,0 +1,176 @@
+"""Encoder-decoder model (seamless-m4t backbone).
+
+The speech/text modality frontend is a STUB per the brief: the encoder
+consumes precomputed frame embeddings (B, S_enc, d) supplied by
+``input_specs``.  The decoder is a standard causal transformer with
+cross-attention; decode shapes lower the *decoder* serve step with the
+encoder memory precomputed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .lm import _norm_pair, _stack
+from .params import ParamSpec
+
+
+def cross_attention_specs(cfg) -> Dict[str, ParamSpec]:
+    return L.attention_specs(cfg)
+
+
+def encdec_specs(cfg) -> Dict[str, Any]:
+    enc_layer: Dict[str, Any] = {}
+    enc_layer.update(_norm_pair(cfg, "ln1"))
+    enc_layer["attn"] = L.attention_specs(cfg)
+    enc_layer.update(_norm_pair(cfg, "ln2"))
+    enc_layer["mlp"] = L.mlp_specs(cfg)
+
+    dec_layer: Dict[str, Any] = {}
+    dec_layer.update(_norm_pair(cfg, "ln1"))
+    dec_layer["attn"] = L.attention_specs(cfg)
+    dec_layer.update(_norm_pair(cfg, "lnx"))
+    dec_layer["xattn"] = cross_attention_specs(cfg)
+    dec_layer.update(_norm_pair(cfg, "ln2"))
+    dec_layer["mlp"] = L.mlp_specs(cfg)
+
+    specs: Dict[str, Any] = {
+        "embed": L.embed_specs(cfg),
+        "enc_layers": _stack(enc_layer, cfg.enc_layers),
+        "dec_layers": _stack(dec_layer, cfg.n_layers),
+    }
+    specs.update(_norm_pair(cfg, "enc_norm"))
+    specs.update(_norm_pair(cfg, "final_norm"))
+    return specs
+
+
+def _cross_attend(p, x, mem_k, mem_v, *, cfg, rules, backend):
+    """x: (B,S,d) queries; mem_k/v: (B,Se,Hkv,Dh) precomputed."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    att = jax.vmap(lambda qq, kk, vv: ops_attention(
+        qq, kk, vv, backend))(q, mem_k, mem_v)
+    out = jnp.einsum("bshk,hkd->bsd", att, p["wo"])
+    return L.constrain(out, rules, ("batch", None, "embed"))
+
+
+def ops_attention(q, k, v, backend):
+    from ..kernels import ops
+    return ops.attention(q, k, v, causal=False, backend=backend)
+
+
+def encode(cfg, params, frames, *, rules=None, backend="auto"):
+    """frames: (B, Se, d) precomputed frontend embeddings."""
+    B, Se, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+    x = frames
+
+    def layer(lp, h):
+        hn = L.apply_norm(lp["ln1"], h, cfg.norm, lp.get("ln1_b"), backend)
+        hn = L.attention_apply(lp["attn"], hn, positions, cfg=cfg,
+                               rules=rules, causal=False, backend=backend)
+        h = h + hn
+        hn = L.apply_norm(lp["ln2"], h, cfg.norm, lp.get("ln2_b"), backend)
+        return h + L.mlp_apply(lp["mlp"], hn, cfg=cfg, rules=rules)
+
+    fn = jax.checkpoint(layer) if cfg.remat == "full" else layer
+
+    def body(carry, lp):
+        return fn(lp, carry), None
+
+    x, _ = lax.scan(body, x, params["enc_layers"])
+    return L.apply_norm(params["enc_norm"], x, cfg.norm,
+                        params.get("enc_norm_b"), backend)
+
+
+def _mem_kv(p, mem):
+    k = jnp.einsum("bsd,dhk->bshk", mem, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", mem, p["wv"])
+    return k, v
+
+
+def forward(cfg, params, batch, *, rules=None, backend="auto"):
+    """batch: frontend (B,Se,d), tokens (B,S), labels (B,S)."""
+    mem = encode(cfg, params, batch["frontend"].astype(cfg.param_dtype),
+                 rules=rules, backend=backend)
+    tokens = batch["tokens"]
+    x = L.embed_apply(params["embed"], tokens)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def layer(lp, h):
+        hn = L.apply_norm(lp["ln1"], h, cfg.norm, lp.get("ln1_b"), backend)
+        hn = L.attention_apply(lp["attn"], hn, positions, cfg=cfg,
+                               rules=rules, causal=True, backend=backend)
+        h = h + hn
+        hn = L.apply_norm(lp["lnx"], h, cfg.norm, lp.get("lnx_b"), backend)
+        mk, mv = _mem_kv(lp["xattn"], mem)
+        h = h + _cross_attend(lp["xattn"], hn, mk, mv, cfg=cfg, rules=rules,
+                              backend=backend)
+        hn = L.apply_norm(lp["ln2"], h, cfg.norm, lp.get("ln2_b"), backend)
+        return h + L.mlp_apply(lp["mlp"], hn, cfg=cfg, rules=rules)
+
+    fn = jax.checkpoint(layer) if cfg.remat == "full" else layer
+
+    def body(carry, lp):
+        return fn(lp, carry), None
+
+    x, _ = lax.scan(body, x, params["dec_layers"])
+    x = L.apply_norm(params["final_norm"], x, cfg.norm,
+                     params.get("final_norm_b"), backend)
+    logits = L.unembed_apply(params["embed"], x, cfg)
+    loss = L.cross_entropy(logits, batch["labels"], cfg.vocab)
+    return loss, logits
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg, batch: int, seq_len: int, enc_len: int) -> Dict[str, Any]:
+    Lc, B = cfg.n_layers, batch
+    Hkv, Dh = cfg.n_kv, cfg.d_head
+    dt = cfg.param_dtype
+    kv = ParamSpec((Lc, B, seq_len, Hkv, Dh), dt,
+                   (None, "batch", "seq_kv", "kv_heads", None), init="zeros")
+    xkv = ParamSpec((Lc, B, enc_len, Hkv, Dh), dt,
+                    (None, "batch", "seq_kv", "kv_heads", None), init="zeros")
+    return {"k": kv, "v": kv, "xk": xkv, "xv": xkv}
+
+
+def decode_step(cfg, params, cache, tokens, pos, *, rules=None,
+                backend="auto"):
+    """Decoder-only serve step with precomputed cross K/V in the cache."""
+    from ..kernels import ops
+    x = L.embed_apply(params["embed"], tokens)
+
+    def body(h, inp):
+        lp, kc, vc, xk, xv = inp
+        hn = L.apply_norm(lp["ln1"], h, cfg.norm, lp.get("ln1_b"), backend)
+        y, newkv = L.attention_decode(lp["attn"], hn, {"k": kc, "v": vc},
+                                      pos, cfg=cfg, rules=rules,
+                                      backend=backend)
+        h = h + y
+        hn = L.apply_norm(lp["lnx"], h, cfg.norm, lp.get("lnx_b"), backend)
+        q = jnp.einsum("bd,dhk->bhk", hn, lp["xattn"]["wq"])
+        enc_len = xk.shape[1]
+        att = jax.vmap(lambda qq, kk, vv: ops.decode_attention(
+            qq, kk, vv, enc_len, backend=backend))(q, xk, xv)
+        h = h + jnp.einsum("bhk,hkd->bd", att, lp["xattn"]["wo"])
+        hn = L.apply_norm(lp["ln2"], h, cfg.norm, lp.get("ln2_b"), backend)
+        h = h + L.mlp_apply(lp["mlp"], hn[:, None], cfg=cfg, rules=rules)[:, 0]
+        return h, (newkv["k"], newkv["v"])
+
+    h, (ks, vs) = lax.scan(body, x, (params["dec_layers"], cache["k"],
+                                     cache["v"], cache["xk"], cache["xv"]))
+    new_cache = dict(cache, k=ks, v=vs)
+    h = L.apply_norm(params["final_norm"], h, cfg.norm,
+                     params.get("final_norm_b"), backend)
+    logits = L.unembed_apply(params["embed"], h, cfg)
+    return logits, new_cache

@@ -1,0 +1,320 @@
+"""Decoder-only LM assembly: dense / MoE / SSM / hybrid / VLM families.
+
+Layers are scanned (stacked params) to keep HLO size and compile time
+independent of depth — essential for the 512-device dry-runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .params import ParamSpec, is_spec
+
+# ---------------------------------------------------------------------------
+# spec assembly
+# ---------------------------------------------------------------------------
+
+
+def _stack(spec_tree, n: int):
+    def f(s: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(s, shape=(n,) + s.shape,
+                                   axes=(None,) + tuple(s.axes or
+                                                        (None,) * len(s.shape)))
+    return jax.tree_util.tree_map(f, spec_tree, is_leaf=is_spec)
+
+
+def _norm_pair(cfg, name: str) -> Dict[str, ParamSpec]:
+    sp = {name: L.norm_spec(cfg)}
+    if cfg.norm == "ln":
+        sp[name + "_b"] = dataclasses.replace(L.norm_spec(cfg), init="zeros")
+    return sp
+
+
+def _dense_layer_specs(cfg) -> Dict[str, Any]:
+    sp: Dict[str, Any] = {}
+    sp.update(_norm_pair(cfg, "ln1"))
+    sp["attn"] = L.attention_specs(cfg)
+    sp.update(_norm_pair(cfg, "ln2"))
+    if cfg.family == "moe":
+        sp["moe"] = L.moe_specs(cfg)
+    else:
+        sp["mlp"] = L.mlp_specs(cfg)
+    return sp
+
+
+def _ssm_layer_specs(cfg) -> Dict[str, Any]:
+    sp: Dict[str, Any] = {}
+    sp.update(_norm_pair(cfg, "ln1"))
+    sp["mamba"] = L.mamba2_specs(cfg)
+    return sp
+
+
+def lm_specs(cfg) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {"embed": L.embed_specs(cfg)}
+    specs.update(_norm_pair(cfg, "final_norm"))
+    if cfg.family in ("dense", "moe", "vlm"):
+        specs["layers"] = _stack(_dense_layer_specs(cfg), cfg.n_layers)
+    elif cfg.family == "ssm":
+        specs["layers"] = _stack(_ssm_layer_specs(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        specs["layers"] = _stack(_ssm_layer_specs(cfg), cfg.n_layers)
+        shared = {}
+        shared.update(_norm_pair(cfg, "ln1"))
+        shared["attn"] = L.attention_specs(cfg)
+        shared.update(_norm_pair(cfg, "ln2"))
+        shared["mlp"] = L.mlp_specs(cfg)
+        specs["shared_attn"] = shared
+    else:
+        raise ValueError(cfg.family)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _dense_layer_apply(cfg, rules, window, backend, lp, x, positions):
+    h = L.apply_norm(lp["ln1"], x, cfg.norm, lp.get("ln1_b"), backend)
+    h = L.attention_apply(lp["attn"], h, positions, cfg=cfg, rules=rules,
+                          causal=True, window=window, backend=backend)
+    x = x + h
+    h = L.apply_norm(lp["ln2"], x, cfg.norm, lp.get("ln2_b"), backend)
+    if cfg.family == "moe":
+        h = L.moe_apply(lp["moe"], h, cfg=cfg, rules=rules)
+    else:
+        h = L.mlp_apply(lp["mlp"], h, cfg=cfg, rules=rules)
+    return x + h
+
+
+def _ssm_layer_apply(cfg, rules, backend, lp, x):
+    h = L.apply_norm(lp["ln1"], x, cfg.norm, lp.get("ln1_b"), backend)
+    h = L.mamba2_apply(lp["mamba"], h, cfg=cfg, rules=rules, backend=backend)
+    return x + h
+
+
+def _shared_attn_apply(cfg, rules, backend, sp, x, positions):
+    h = L.apply_norm(sp["ln1"], x, cfg.norm, sp.get("ln1_b"), backend)
+    h = L.attention_apply(sp["attn"], h, positions, cfg=cfg, rules=rules,
+                          causal=True, window=cfg.window, backend=backend)
+    x = x + h
+    h = L.apply_norm(sp["ln2"], x, cfg.norm, sp.get("ln2_b"), backend)
+    return x + L.mlp_apply(sp["mlp"], h, cfg=cfg, rules=rules)
+
+
+def _scan_layers(layer_fn, stacked_params, x, remat: bool, rules=None):
+    """Scan the layer stack.  The carry (residual stream) — which is what
+    full remat saves per layer — is constrained to sequence-parallel
+    sharding ('seq_act' → model) so 34B-class × 4k × 256-batch activation
+    checkpoints fit per-device HBM; XLA inserts the all-gather /
+    reduce-scatter pair around the head/mlp-sharded interior."""
+    def seq_shard(h):
+        return L.constrain(h, rules, ("batch", "seq_act", "embed"))
+
+    fn = layer_fn
+    if remat:
+        fn = jax.checkpoint(fn)
+
+    def body(carry, lp):
+        return seq_shard(fn(lp, carry)), None
+
+    x, _ = lax.scan(body, seq_shard(x), stacked_params)
+    return x
+
+
+def hidden_states(cfg, params, x, positions, *, rules=None, backend="auto"):
+    """Run the layer stack on embedded inputs x: (B, S, d)."""
+    remat = cfg.remat == "full"
+    if cfg.family in ("dense", "moe", "vlm"):
+        fn = functools.partial(_dense_layer_apply, cfg, rules, cfg.window,
+                               backend)
+        x = _scan_layers(lambda lp, h: fn(lp, h, positions),
+                         params["layers"], x, remat, rules=rules)
+    elif cfg.family == "ssm":
+        fn = functools.partial(_ssm_layer_apply, cfg, rules, backend)
+        x = _scan_layers(fn, params["layers"], x, remat, rules=rules)
+    elif cfg.family == "hybrid":
+        ae = cfg.attn_every or cfg.n_layers
+        n = cfg.n_layers
+        fn = functools.partial(_ssm_layer_apply, cfg, rules, backend)
+        start = 0
+        while start < n:
+            width = min(ae, n - start)
+            group = jax.tree_util.tree_map(
+                lambda a: lax.slice_in_dim(a, start, start + width, axis=0),
+                params["layers"])
+            x = _scan_layers(fn, group, x, remat, rules=rules)
+            x = _shared_attn_apply(cfg, rules, backend,
+                                   params["shared_attn"], x, positions)
+            start += width
+    else:
+        raise ValueError(cfg.family)
+    return L.apply_norm(params["final_norm"], x, cfg.norm,
+                        params.get("final_norm_b"), backend)
+
+
+def forward(cfg, params, batch, *, rules=None, backend="auto"):
+    """Training forward.  batch: tokens (B,S_text), labels (B,S_text),
+    optional frontend (B,Nf,d) for vlm/audio.  Returns (loss, logits)."""
+    tokens = batch["tokens"]
+    x = L.embed_apply(params["embed"], tokens)
+    if cfg.n_frontend_tokens:
+        fe = batch["frontend"].astype(x.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = L.constrain(x, rules, ("batch", None, "embed"))
+    h = hidden_states(cfg, params, x, positions, rules=rules, backend=backend)
+    if cfg.n_frontend_tokens:
+        h = h[:, cfg.n_frontend_tokens:]
+    logits = L.unembed_apply(params["embed"], h, cfg)
+    logits = L.constrain(logits, rules, ("batch", None, "vocab"))
+    loss = L.cross_entropy(logits, batch["labels"], cfg.vocab)
+    return loss, logits
+
+
+# ---------------------------------------------------------------------------
+# decode (serve step)
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg, batch: int, seq_len: int) -> Dict[str, Any]:
+    """Abstract KV/state cache layout for one-token decode.
+
+    Dense/MoE/VLM: per-layer KV (L, B, S, Hkv, Dh) — S sharded over
+    'model' (seq_kv) so 32k×128 caches fit HBM.
+    SSM: recurrent state (L, B, H, N, P) + conv tail.
+    Hybrid: SSM states + one KV cache per shared-attention application
+    (window-bounded for long contexts)."""
+    Lc, B, S = cfg.n_layers, batch, seq_len
+    Hkv, Dh = cfg.n_kv, cfg.d_head
+    dt = cfg.param_dtype
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = ParamSpec((Lc, B, S, Hkv, Dh), dt,
+                       (None, "batch", "seq_kv", "kv_heads", None),
+                       init="zeros")
+        return {"k": kv, "v": kv}
+    di = cfg.ssm_inner
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_c = di + 2 * N
+    ssm = {
+        "h": ParamSpec((Lc, B, H, N, P), jnp.float32,
+                       (None, "batch", "ssm_inner", None, None), init="zeros"),
+        "conv": ParamSpec((Lc, B, cfg.conv_k - 1, conv_c), dt,
+                          (None, "batch", None, "ssm_inner"), init="zeros"),
+    }
+    if cfg.family == "ssm":
+        return ssm
+    # hybrid: shared-attention KV per application, window-bounded
+    ae = cfg.attn_every or cfg.n_layers
+    n_app = -(-cfg.n_layers // ae)
+    Sw = min(S, cfg.window) if cfg.window else S
+    kv = ParamSpec((n_app, B, Sw, Hkv, Dh), dt,
+                   (None, "batch", "seq_kv", "kv_heads", None), init="zeros")
+    ssm.update({"k": kv, "v": kv})
+    return ssm
+
+
+def decode_step(cfg, params, cache, tokens, pos, *, rules=None,
+                backend="auto"):
+    """One token for every sequence.  tokens: (B,), pos: (B,) current
+    lengths.  Returns (logits (B, Vpad), new cache)."""
+    x = L.embed_apply(params["embed"], tokens)          # (B, d)
+    x = L.constrain(x, rules, ("batch", "embed"))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(h, inp):
+            lp, kc, vc = inp
+            hn = L.apply_norm(lp["ln1"], h, cfg.norm, lp.get("ln1_b"), backend)
+            y, newkv = L.attention_decode(lp["attn"], hn, {"k": kc, "v": vc},
+                                          pos, cfg=cfg, rules=rules,
+                                          backend=backend)
+            h = h + y
+            hn = L.apply_norm(lp["ln2"], h, cfg.norm, lp.get("ln2_b"), backend)
+            if cfg.family == "moe":
+                y = L.moe_apply(lp["moe"], hn[:, None], cfg=cfg,
+                                rules=rules)[:, 0]
+            else:
+                y = L.mlp_apply(lp["mlp"], hn[:, None], cfg=cfg,
+                                rules=rules)[:, 0]
+            return h + y, (newkv["k"], newkv["v"])
+
+        h, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+
+    elif cfg.family == "ssm":
+        def body(h, inp):
+            lp, hs, cs = inp
+            hn = L.apply_norm(lp["ln1"], h, cfg.norm, lp.get("ln1_b"), backend)
+            y, st = L.mamba2_decode(lp["mamba"], hn, {"h": hs, "conv": cs},
+                                    cfg=cfg, backend=backend)
+            return h + y, (st["h"], st["conv"])
+
+        h, (hs, cs) = lax.scan(body, x, (params["layers"], cache["h"],
+                                         cache["conv"]))
+        new_cache = {"h": hs, "conv": cs}
+
+    elif cfg.family == "hybrid":
+        ae = cfg.attn_every or cfg.n_layers
+        n = cfg.n_layers
+        W = cache["k"].shape[2]
+        slot = pos % W
+        kv_len = jnp.minimum(pos + 1, W)
+        h = x
+        hs_out, cs_out, k_out, v_out = [], [], [], []
+        start, app = 0, 0
+        while start < n:
+            width = min(ae, n - start)
+            group = jax.tree_util.tree_map(
+                lambda a: lax.slice_in_dim(a, start, start + width, axis=0),
+                params["layers"])
+
+            def body(hh, inp):
+                lp, hstate, cstate = inp
+                hn = L.apply_norm(lp["ln1"], hh, cfg.norm, lp.get("ln1_b"),
+                                  backend)
+                y, st = L.mamba2_decode(lp["mamba"], hn,
+                                        {"h": hstate, "conv": cstate},
+                                        cfg=cfg, backend=backend)
+                return hh + y, (st["h"], st["conv"])
+
+            h, (hs, cs) = lax.scan(
+                body, h, (group,
+                          lax.slice_in_dim(cache["h"], start,
+                                           start + width, axis=0),
+                          lax.slice_in_dim(cache["conv"], start,
+                                           start + width, axis=0)))
+            hs_out.append(hs)
+            cs_out.append(cs)
+            sp = params["shared_attn"]
+            hn = L.apply_norm(sp["ln1"], h, cfg.norm, sp.get("ln1_b"), backend)
+            y, newkv = L.attention_decode(
+                sp["attn"], hn, {"k": cache["k"][app], "v": cache["v"][app]},
+                pos, cfg=cfg, rules=rules, backend=backend,
+                slot=slot, kv_len=kv_len)
+            h = h + y
+            hn = L.apply_norm(sp["ln2"], h, cfg.norm, sp.get("ln2_b"), backend)
+            h = h + L.mlp_apply(sp["mlp"], hn[:, None], cfg=cfg,
+                                rules=rules)[:, 0]
+            k_out.append(newkv["k"])
+            v_out.append(newkv["v"])
+            start += width
+            app += 1
+        new_cache = {"h": jnp.concatenate(hs_out, 0),
+                     "conv": jnp.concatenate(cs_out, 0),
+                     "k": jnp.stack(k_out, 0), "v": jnp.stack(v_out, 0)}
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.apply_norm(params["final_norm"], h, cfg.norm,
+                     params.get("final_norm_b"), backend)
+    logits = L.unembed_apply(params["embed"], h, cfg)
+    logits = L.constrain(logits, rules, ("batch", "vocab"))
+    return logits, new_cache

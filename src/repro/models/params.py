@@ -1,0 +1,191 @@
+"""Lightweight functional parameter system with logical-axis sharding.
+
+Every parameter is declared as a ``ParamSpec`` (shape, dtype, logical
+axes).  Logical axes are resolved to mesh axes by ``AxisRules`` with a
+divisible-or-replicate policy: if a dimension does not divide the mesh
+axis extent, that dimension is replicated and the event is recorded (the
+roofline report surfaces the cost; §Perf fixes the interesting ones,
+e.g. head padding).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    axes: Tuple[Optional[str], ...] = ()   # logical axis names per dim
+    init: str = "normal"                   # normal | zeros | ones
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} vs shape {self.shape}")
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_abstract(spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: s.abstract(), spec_tree, is_leaf=is_spec)
+
+
+def init_params(spec_tree, key) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, spec.dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, spec.dtype))
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = spec.scale / math.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, spec.shape, jnp.float32)
+                        * std).astype(spec.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AxisRules:
+    """logical axis -> tuple of mesh axes (in priority order)."""
+    rules: Dict[str, Tuple[str, ...]]
+    mesh: Mesh
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+    def mesh_size(self, names: Tuple[str, ...]) -> int:
+        n = 1
+        for m in names:
+            n *= self.mesh.shape[m]
+        return n
+
+    def partition_spec(self, spec: ParamSpec) -> P:
+        return self.pspec_for(spec.shape, spec.axes, what=str(spec.shape))
+
+    def pspec_for(self, shape, axes, what: str = "") -> P:
+        entries: List[Any] = []
+        used: set = set()
+        for dim, ax in zip(shape, axes or (None,) * len(shape)):
+            if ax is None or ax not in self.rules:
+                entries.append(None)
+                continue
+            names = tuple(m for m in self.rules[ax] if m not in used
+                          and m in self.mesh.shape)
+            if not names:
+                entries.append(None)
+                continue
+            if dim % self.mesh_size(names) != 0:
+                # divisible-or-replicate fallback: try prefixes
+                ok = None
+                for cut in range(len(names) - 1, 0, -1):
+                    if dim % self.mesh_size(names[:cut]) == 0:
+                        ok = names[:cut]
+                        break
+                if ok is None:
+                    self.notes.append(
+                        f"replicated {ax}={dim} of {what}: not divisible by "
+                        f"mesh{names}={self.mesh_size(names)}")
+                    entries.append(None)
+                    continue
+                names = ok
+            used.update(names)
+            entries.append(names if len(names) > 1 else names[0])
+        return P(*entries)
+
+    def sharding(self, spec: ParamSpec) -> NamedSharding:
+        return NamedSharding(self.mesh, self.partition_spec(spec))
+
+    def tree_pspecs(self, spec_tree):
+        return jax.tree_util.tree_map(self.partition_spec, spec_tree,
+                                      is_leaf=is_spec)
+
+    def tree_shardings(self, spec_tree):
+        return jax.tree_util.tree_map(self.sharding, spec_tree,
+                                      is_leaf=is_spec)
+
+
+def default_rules(mesh: Mesh, strategy: str = "tp") -> AxisRules:
+    """The framework's logical-axis tables (DESIGN.md §5).
+
+    strategy="tp"   — Megatron-style: batch→data, heads/mlp/experts→model,
+                      sequence-parallel residuals. (paper-era default)
+    strategy="fsdp" — fully-sharded data parallel: batch over EVERY mesh
+                      axis (1 sequence/chip at the assigned shapes) and
+                      weights sharded over (data×model) on their embed
+                      dim; XLA inserts per-layer weight all-gathers and
+                      gradient reduce-scatters.  Wins when per-device
+                      token counts make TP activation all-gathers dwarf
+                      weight traffic (the §Perf granite/yi finding).
+    """
+    has_pod = "pod" in mesh.shape
+    if strategy == "fsdp":
+        everything = (("pod", "data", "model") if has_pod
+                      else ("data", "model"))
+        return AxisRules(rules={
+            "batch": everything,
+            "vocab": everything,   # embedding table fully sharded
+            "heads": (),
+            "kv_heads": (),
+            "kv_embed": everything,
+            "mlp": (),
+            "experts": ("model",),
+            "ssm_inner": (),
+            "seq_kv": ("model",),
+            "seq_act": (),
+            "embed": everything,   # weight embed dims fully sharded
+            "opt_data": (),
+        }, mesh=mesh)
+    batch = ("pod", "data") if has_pod else ("data",)
+    return AxisRules(rules={
+        "batch": batch,
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "kv_embed": ("model",),   # row-parallel kv projections (TP > Hkv)
+        "mlp": ("model",),
+        "experts": ("model",),
+        "ssm_inner": ("model",),
+        "seq_kv": ("model",),     # decode KV caches shard on sequence
+        "seq_act": ("model",),    # Megatron-style sequence parallelism for
+                                  # layer-boundary residuals (remat saves)
+        "embed": (),              # d_model replicated (activations row dim)
+        "opt_data": ("data",),    # ZeRO-1 optimizer-state extra axis
+    }, mesh=mesh)
+
+
+def zero1_pspec(rules: AxisRules, spec: ParamSpec) -> P:
+    """Optimizer-state sharding: the param's own spec, plus 'data' on the
+    first still-unsharded divisible dimension (ZeRO-1)."""
+    base = rules.partition_spec(spec)
+    entries = list(base)
+    used = set()
+    for e in entries:
+        if e is None:
+            continue
+        used.update((e,) if isinstance(e, str) else e)
+    dsize = rules.mesh.shape.get("data", 1)
+    if dsize == 1 or "data" in used:
+        return base
+    for i, (dim, cur) in enumerate(zip(spec.shape, entries)):
+        if cur is None and dim % dsize == 0:
+            entries[i] = "data"
+            return P(*entries)
+    return base

@@ -1,0 +1,19 @@
+"""Module-scope kernels for the multi-device subprocess tests
+(inspect.getsource needs file-backed sources)."""
+from repro.core import cox
+
+
+@cox.kernel
+def vec_madd(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32),
+             b: cox.Array(cox.f32), n: cox.i32):
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    if i < n:
+        out[i] = a[i] * 2.0 + b[i]
+
+
+@cox.kernel
+def histogram(c, hist: cox.Array(cox.f32), data: cox.Array(cox.i32),
+              n: cox.i32):
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    if i < n:
+        c.atomic_add(hist, data[i], 1.0)

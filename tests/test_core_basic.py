@@ -1,0 +1,113 @@
+"""End-to-end correctness of the COX pipeline on the paper's own examples."""
+import numpy as np
+import pytest
+
+from repro.core import cox
+from repro.core.oracle import run_grid as oracle_run
+
+
+# ---- Paper Code 1: warp-shuffle reduction inside an if (motivating example)
+@cox.kernel
+def reduce_first_warp(c, out: cox.Array(cox.f32), val: cox.Array(cox.f32)):
+    tid = c.thread_idx()
+    v = val[tid]
+    if tid < 32:
+        offset = 16
+        while offset > 0:
+            s = c.shfl_down(v, offset)
+            v = v + s
+            offset = offset // 2
+    if tid == 0:
+        out[0] = v
+
+
+# ---- Paper Code 4: warp vote
+@cox.kernel
+def vote_all_kernel(c, result: cox.Array(cox.i32)):
+    tx = c.thread_idx()
+    p = tx % 2
+    r = c.vote_all(p)
+    result[tx] = c.i32(r)
+
+
+@cox.kernel
+def vec_add(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32),
+            b: cox.Array(cox.f32), n: cox.i32):
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    if i < n:
+        out[i] = a[i] + b[i]
+
+
+# ---- block-barrier tree reduction in shared memory (SDK reduce0 shape)
+@cox.kernel
+def block_reduce_shared(c, out: cox.Array(cox.f32), val: cox.Array(cox.f32)):
+    tile = c.shared((256,), cox.f32)
+    tid = c.thread_idx()
+    tile[tid] = val[c.block_idx() * c.block_dim() + tid]
+    c.syncthreads()
+    s = 128
+    while s > 0:
+        if tid < s:
+            tile[tid] = tile[tid] + tile[tid + s]
+        c.syncthreads()
+        s = s // 2
+    if tid == 0:
+        out[c.block_idx()] = tile[0]
+
+
+def test_code1_reduction_matches_oracle_and_math():
+    b_size = 128
+    val = np.arange(b_size, dtype=np.float32)
+    out0 = np.zeros(1, np.float32)
+    ref = oracle_run(reduce_first_warp.ir, grid=1, block=b_size,
+                     args=(out0, val))
+    assert np.allclose(ref["out"], val[:32].sum())
+    got = reduce_first_warp.launch(grid=1, block=b_size, args=(out0, val))
+    np.testing.assert_allclose(np.asarray(got["out"]), ref["out"])
+
+
+@pytest.mark.parametrize("mode", ["jit", "normal"])
+@pytest.mark.parametrize("simd", [True, False])
+def test_vote_all_modes(mode, simd):
+    res0 = np.zeros(64, np.int32)
+    ref = oracle_run(vote_all_kernel.ir, grid=1, block=64, args=(res0,))
+    got = vote_all_kernel.launch(grid=1, block=64, args=(res0,),
+                                 mode=mode, simd=simd)
+    np.testing.assert_array_equal(np.asarray(got["result"]), ref["result"])
+
+
+@pytest.mark.parametrize("collapse", ["flat", "hier", "hybrid"])
+def test_vec_add_collapse_modes(collapse):
+    n = 1000
+    a = np.random.default_rng(0).normal(size=1024).astype(np.float32)
+    b = np.random.default_rng(1).normal(size=1024).astype(np.float32)
+    out0 = np.zeros(1024, np.float32)
+    got = vec_add.launch(grid=4, block=256, args=(out0, a, b, n),
+                         collapse=collapse)
+    want = np.where(np.arange(1024) < n, a + b, 0)
+    np.testing.assert_allclose(np.asarray(got["out"]), want)
+
+
+def test_block_reduce_shared_matches_oracle():
+    val = np.random.default_rng(2).normal(size=512).astype(np.float32)
+    out0 = np.zeros(2, np.float32)
+    ref = oracle_run(block_reduce_shared.ir, grid=2, block=256,
+                     args=(out0, val))
+    got = block_reduce_shared.launch(grid=2, block=256, args=(out0, val))
+    np.testing.assert_allclose(np.asarray(got["out"]), ref["out"], rtol=1e-5)
+    np.testing.assert_allclose(ref["out"],
+                               val.reshape(2, 256).sum(1), rtol=1e-4)
+
+
+def test_flat_rejects_warp_features():
+    from repro.core.flat import FlatUnsupported
+    with pytest.raises(FlatUnsupported):
+        reduce_first_warp.launch(grid=1, block=64,
+                                 args=(np.zeros(1, np.float32),
+                                       np.zeros(64, np.float32)),
+                                 collapse="flat")
+
+
+def test_hybrid_picks_flat_for_warp_free():
+    assert not vec_add.uses_warp_features()
+    assert reduce_first_warp.uses_warp_features()

@@ -1,0 +1,161 @@
+"""Whitebox tests of the hierarchical-collapsing pass pipeline:
+CFG invariants, extra-barrier placement, PR discovery (incl. the paper's
+literal Algorithm 2), hierarchical nesting (Fig. 7), replication classes
+(paper §3.6), and loop peeling structure."""
+import pytest
+
+from repro.core import cox
+from repro.core.cfg import Br
+from repro.core.execute import compile_kernel
+from repro.core.passes import find_parallel_regions_alg2
+from repro.core.regions import BlockPR, BlockPeel, WarpPR, WarpPeel
+from repro.core.types import BarrierLevel, CoxUnsupported
+from repro.core import kernel_ir as K
+
+
+@cox.kernel
+def code1(c, out: cox.Array(cox.f32), val: cox.Array(cox.f32)):
+    """Paper Code 1."""
+    v = val[c.thread_idx()]
+    if c.thread_idx() < 32:
+        offset = 16
+        while offset > 0:
+            s = c.shfl_down(v, offset)
+            v = v + s
+            offset = offset // 2
+    if c.thread_idx() == 0:
+        out[0] = v
+
+
+@cox.kernel
+def fig5(c, a: cox.Array(cox.f32)):
+    """Paper Fig. 5: barrier inside a for-loop."""
+    tid = c.thread_idx()
+    for i in range(12):
+        a[tid] = a[tid] + 1.0
+        a[tid] = a[tid] + 2.0
+        c.syncthreads()
+        a[tid] = a[tid] + 3.0
+
+
+@cox.kernel
+def warp_free(c, a: cox.Array(cox.f32)):
+    tid = c.thread_idx()
+    if tid < 16:
+        a[tid] = a[tid] * 2.0
+
+
+def test_code1_hierarchical_structure():
+    ck = compile_kernel(code1.ir)
+    bprs = [n for n in ck.machine.nodes if isinstance(n, BlockPR)]
+    bpeels = [n for n in ck.machine.nodes if isinstance(n, BlockPeel)]
+    # Code 1 has no block-level barriers except entry/exit: a single
+    # block-level PR spans the whole kernel body (plus entry/exit strips)
+    assert len(bpeels) == 0
+    # the warp-level machine inside must contain peels (the tid<32 branch
+    # + the loop) and multiple warp PRs — the Fig. 7 hierarchy
+    wpeels = sum(sum(isinstance(w, WarpPeel) for w in n.warp.nodes)
+                 for n in bprs)
+    wprs = sum(sum(isinstance(w, WarpPR) for w in n.warp.nodes)
+               for n in bprs)
+    assert wpeels >= 2
+    assert wprs >= 3
+
+
+def test_code1_replication_classes():
+    ck = compile_kernel(code1.ir)
+    # v is written before the if and read after -> lives across warp PRs
+    # within a single block-level PR: the paper replicates it ×32
+    # (warp class, unless it crosses a block PR)
+    assert ck.classes["v"] in ("warp", "block")
+    # warp buffers are always warp-replicated (RAW/WAR bracketing)
+    assert all(v == "warp" for k, v in ck.classes.items()
+               if k.startswith(".warpbuf"))
+
+
+def test_fig5_loop_barriers_make_two_prs_per_iteration():
+    ck = compile_kernel(fig5.ir)
+    # the loop body splits at the syncthreads: +1/+2 form one PR,
+    # +3 another (paper Fig. 5c)
+    bprs = [n for n in ck.machine.nodes if isinstance(n, BlockPR)]
+    assert len(bprs) >= 3  # pre-loop, body-pre-barrier, body-post-barrier
+    peels = [n for n in ck.machine.nodes if isinstance(n, BlockPeel)]
+    assert len(peels) == 1  # the loop condition (peeled, block level)
+
+
+def test_every_barrier_ends_its_block():
+    ck = compile_kernel(code1.ir)
+    for blk in ck.cfg.blocks.values():
+        for i, ins in enumerate(blk.instrs):
+            if isinstance(ins, K.Barrier):
+                assert i == len(blk.instrs) - 1, \
+                    f"barrier mid-block in {blk.name}"
+
+
+def test_branch_blocks_are_pure():
+    ck = compile_kernel(code1.ir)
+    for blk in ck.cfg.blocks.values():
+        if isinstance(blk.term, Br):
+            assert not blk.instrs, f"{blk.name} has instrs before Br"
+
+
+def test_warp_prs_nest_inside_block_prs():
+    """Paper §3.5: every warp-level PR is a subset of a block-level PR."""
+    for kern in (code1, fig5, warp_free):
+        ck = compile_kernel(kern.ir)
+        for node in ck.machine.nodes:
+            if not isinstance(node, BlockPR):
+                continue
+            for w in node.warp.nodes:
+                if isinstance(w, WarpPR):
+                    assert set(w.blocks) <= set(node.blocks)
+
+
+def test_alg2_matches_constructive_partition():
+    """The literal Algorithm 2 transliteration and the constructive
+    edge-cut partition agree on warp-level PR contents."""
+    for kern in (code1, fig5):
+        ck = compile_kernel(kern.ir)
+        alg2 = find_parallel_regions_alg2(ck.cfg, BarrierLevel.WARP)
+        alg2_blocks = set()
+        for pr in alg2:
+            alg2_blocks |= pr
+        mine = set()
+        for node in ck.machine.nodes:
+            if isinstance(node, BlockPR):
+                for w in node.warp.nodes:
+                    if isinstance(w, WarpPR):
+                        mine |= set(w.blocks)
+        # Alg2 includes only blocks reachable backward from barrier
+        # blocks; constructive partition covers all non-peel blocks.
+        # Every Alg2 PR block must appear in the constructive partition.
+        assert alg2_blocks <= mine
+
+
+def test_flat_uses_single_warp():
+    ck = warp_free.compiled(collapse="flat", block=64)
+    assert ck.warp_size == 64  # one block-wide "warp" = flat collapsing
+
+
+def test_dynamic_coop_group_rejected():
+    with pytest.raises(CoxUnsupported):
+        @cox.kernel
+        def bad(c, out: cox.Array(cox.f32)):
+            g = c.coalesced_threads()
+
+
+def test_barrier_insertion_adds_entry_exit():
+    ck = compile_kernel(warp_free.ir)
+    entry = ck.cfg.blocks[ck.cfg.entry]
+    assert any(isinstance(i, K.Barrier) and i.source == "entry"
+               for i in entry.instrs)
+    exit_b = ck.cfg.blocks[ck.cfg.exit]
+    assert any(isinstance(i, K.Barrier) and i.source == "exit"
+               for i in exit_b.instrs)
+
+
+def test_warp_intrinsic_lowering_emits_raw_war():
+    ck = compile_kernel(code1.ir)
+    sources = [ins.source for blk in ck.cfg.blocks.values()
+               for ins in blk.instrs if isinstance(ins, K.Barrier)]
+    assert "raw" in sources and "war" in sources

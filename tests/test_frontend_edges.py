@@ -1,0 +1,131 @@
+"""Frontend and coverage-gap negative paths: the unsupported feature set
+must fail loudly (the paper's ✗ rows), and edge syntax must parse."""
+import numpy as np
+import pytest
+
+from repro.core import cox
+from repro.core.types import CoxUnsupported
+from repro.core.oracle import run_grid as oracle_run
+
+
+def test_break_rejected():
+    with pytest.raises(CoxUnsupported, match="break"):
+        @cox.kernel
+        def k(c, out: cox.Array(cox.f32)):
+            for i in range(4):
+                break
+
+
+def test_scalar_param_write_rejected():
+    with pytest.raises(CoxUnsupported, match="read-only"):
+        @cox.kernel
+        def k(c, out: cox.Array(cox.f32), n: cox.i32):
+            n = n + 1
+
+
+def test_chained_compare_rejected():
+    with pytest.raises(CoxUnsupported, match="chained"):
+        @cox.kernel
+        def k(c, out: cox.Array(cox.f32), n: cox.i32):
+            i = c.thread_idx()
+            if 0 < i < n:
+                out[i] = 1.0
+
+
+def test_dynamic_tile_width_rejected():
+    with pytest.raises(CoxUnsupported, match="static"):
+        @cox.kernel
+        def k(c, out: cox.Array(cox.f32), w: cox.i32):
+            v = out[c.thread_idx()]
+            s = c.red_add(v, width=w)
+
+
+def test_warp_call_nested_in_expression_rejected():
+    with pytest.raises(CoxUnsupported, match="sole"):
+        @cox.kernel
+        def k(c, out: cox.Array(cox.f32)):
+            v = out[c.thread_idx()]
+            out[c.thread_idx()] = c.shfl_down(v, 1) + 1.0
+
+
+def test_return_inside_divergence_rejected():
+    @cox.kernel
+    def k(c, out: cox.Array(cox.f32)):
+        if c.thread_idx() < 2:
+            return
+        out[c.thread_idx()] = 1.0
+    with pytest.raises(CoxUnsupported):
+        k.compiled(collapse="hier")
+
+
+# -------- positive edges --------
+
+@cox.kernel
+def k_ternary_boolops(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    i = c.thread_idx()
+    v = a[i]
+    r = v * 2.0 if v > 0.0 and i % 2 == 0 else -v
+    out[i] = max(r, 0.5) + min(v, 0.0) + abs(v) * 0.1
+
+
+def test_ternary_and_boolops_match_oracle():
+    a = np.random.default_rng(5).normal(size=64).astype(np.float32)
+    out0 = np.zeros(64, np.float32)
+    ref = oracle_run(k_ternary_boolops.ir, grid=1, block=64, args=(out0, a))
+    got = k_ternary_boolops.launch(grid=1, block=64, args=(out0, a))
+    np.testing.assert_allclose(np.asarray(got["out"]), ref["out"],
+                               rtol=1e-5, atol=1e-6)
+
+
+@cox.kernel
+def k_math(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    i = c.thread_idx()
+    v = abs(a[i]) + 0.5
+    out[i] = c.exp(c.log(v)) + c.sqrt(v) * c.rsqrt(v) + c.tanh(v) * 0.0 \
+        + c.sigmoid(v) * 0.0 + c.floor(v) * 0.0
+
+
+def test_math_intrinsics_match_oracle():
+    a = np.random.default_rng(6).normal(size=32).astype(np.float32)
+    out0 = np.zeros(32, np.float32)
+    ref = oracle_run(k_math.ir, grid=1, block=32, args=(out0, a))
+    got = k_math.launch(grid=1, block=32, args=(out0, a))
+    np.testing.assert_allclose(np.asarray(got["out"]), ref["out"],
+                               rtol=1e-4, atol=1e-4)
+
+
+@cox.kernel
+def k_ballot(c, out: cox.Array(cox.u32), a: cox.Array(cox.i32)):
+    i = c.thread_idx()
+    b = c.ballot(a[i] > 0)
+    out[i] = b
+
+
+def test_ballot_bitmask():
+    a = np.array([1, -1] * 16, np.int32)
+    out0 = np.zeros(32, np.uint32)
+    got = k_ballot.launch(grid=1, block=32, args=(out0, a))
+    want = sum(1 << i for i in range(0, 32, 2))
+    assert (np.asarray(got["out"]) == np.uint32(want)).all()
+    ref = oracle_run(k_ballot.ir, grid=1, block=32, args=(out0, a))
+    np.testing.assert_array_equal(np.asarray(got["out"]), ref["out"])
+
+
+@cox.kernel
+def k_gridstride(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32),
+                 n: cox.i32):
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    stride = c.grid_dim() * c.block_dim()
+    j = i
+    while j < n:
+        out[j] = a[j] + 1.0
+        j = j + stride
+
+
+def test_grid_stride_loop():
+    n = 500
+    a = np.arange(512, dtype=np.float32)
+    out0 = np.zeros(512, np.float32)
+    got = k_gridstride.launch(grid=2, block=64, args=(out0, a, n))
+    want = np.where(np.arange(512) < n, a + 1, 0)
+    np.testing.assert_allclose(np.asarray(got["out"]), want)
