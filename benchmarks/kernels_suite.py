@@ -363,6 +363,86 @@ _reg("VoteAnyKernel3", "vote", VoteAnyKernel3, 1, 64, _vote_args)
 
 
 # ---------------------------------------------------------------------------
+# extra kernels outside the paper's 31-row table: atomics + a memory-light
+# many-block kernel, used by the backend-equivalence tests and the
+# backend sweep in benchmarks/run.py (Table-1 coverage counts stay on
+# KERNELS; ALL_KERNELS = KERNELS + EXTRA_KERNELS)
+# ---------------------------------------------------------------------------
+
+EXTRA_KERNELS: List[SuiteKernel] = []
+
+
+def _reg_extra(name, features, kernel, grid, block, make_args, check=None):
+    EXTRA_KERNELS.append(SuiteKernel(name, features, kernel, grid, block,
+                                     make_args, check))
+
+
+@cox.kernel
+def histogram64(c, hist: cox.Array(cox.f32), data: cox.Array(cox.i32),
+                n: cox.i32):
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    if i < n:
+        c.atomic_add(hist, data[i], 1.0)
+
+
+def _hist_args():
+    data = RNG.integers(0, 64, size=2000).astype(np.int32)
+    return (np.zeros(64, np.float32), data, 2000)
+
+
+_reg_extra("histogram64", "atomics", histogram64, 16, 128, _hist_args,
+           lambda out: out["hist"].sum() == 2000)
+
+
+@cox.kernel
+def blockCounter(c, total: cox.Array(cox.f32), partial: cox.Array(cox.f32),
+                 val: cox.Array(cox.f32), n: cox.i32):
+    # atomics + plain stores on different arrays in one kernel: each
+    # thread stores its element and block-atomically counts valid ones
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    if i < n:
+        partial[i] = val[i] * 0.5
+        c.atomic_add(total, 0, 1.0)
+
+
+def _bc_args():
+    v = RNG.normal(size=1000).astype(np.float32)
+    return (np.zeros(1, np.float32), np.zeros(1000, np.float32), v, 900)
+
+
+_reg_extra("blockCounter", "atomics", blockCounter, 8, 128, _bc_args,
+           lambda out: out["total"][0] == 900)
+
+
+@cox.kernel
+def saxpyHeavy(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32),
+               b: cox.Array(cox.f32), n: cox.i32):
+    # memory-light, many-block, compute-heavy (Hetero-mark style): the
+    # backend sweep's flagship — block parallelism dominates here
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    if i < n:
+        acc = 0.0
+        for t in range(64):
+            acc = acc + a[i] * 1.0001 + b[i] * 0.9999
+        out[i] = acc
+
+
+def _saxpy_args():
+    n = 64 * 256
+    a = RNG.normal(size=n).astype(np.float32)
+    b = RNG.normal(size=n).astype(np.float32)
+    return (np.zeros(n, np.float32), a, b, n)
+
+
+_reg_extra("saxpyHeavy", "", saxpyHeavy, 64, 256, _saxpy_args)
+
+
+def all_kernels() -> List[SuiteKernel]:
+    """Table-1 rows plus the extra (atomics / sweep) kernels."""
+    return KERNELS + EXTRA_KERNELS
+
+
+# ---------------------------------------------------------------------------
 # unsupported rows (grid sync / dynamic groups — COX's own ✗ rows)
 # ---------------------------------------------------------------------------
 

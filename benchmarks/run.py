@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   flat_vs_hier  — Fig. 12: hierarchical overhead on warp-free kernels
   simd_vote     — Table 2: warp vote with vectorized vs scalar collectives
   jit_mode      — Fig. 13: JIT (unrolled) vs normal (fori) mode
+  backend_sweep — grid-execution backends: scan vs vmap (vs sharded when
+                  >1 device), equal outputs asserted + timing per axis
   scalability   — Fig. 14: blocks across host devices (subprocess, 8 dev)
   roofline      — §Roofline terms from results/dryrun_all.json (if present)
 """
@@ -190,6 +192,49 @@ def jit_mode():
 # ---------------------------------------------------------------------------
 
 
+def backend_sweep():
+    """Grid-execution backend axis (scan | vmap | sharded): the same
+    kernels through every launch backend, equal outputs asserted, median
+    call time per backend.  The vmap column is the block-parallel payoff
+    (paper §4's pthread-per-block, recast as a chunked jax.vmap)."""
+    import jax
+    from benchmarks.kernels_suite import all_kernels
+
+    backends = ["scan", "vmap"]
+    mesh = None
+    if len(jax.devices()) > 1:
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        backends.append("sharded")
+
+    picks = ("vectorAdd", "MatrixMulCUDA", "reduce4", "histogram64",
+             "saxpyHeavy")
+    for sk in all_kernels():
+        if sk.name not in picks:
+            continue
+        args = sk.make_args()
+
+        def run(backend):
+            kw = {"mesh": mesh} if backend == "sharded" else {}
+            return sk.kernel.launch(grid=sk.grid, block=sk.block, args=args,
+                                    backend=backend, **kw)
+
+        base = run("scan")
+        times = {}
+        for b in backends:
+            out = run(b)
+            for k in base:
+                np.testing.assert_array_equal(
+                    np.asarray(out[k]), np.asarray(base[k]),
+                    err_msg=f"{sk.name}.{k}: backend={b} != scan")
+            times[b] = _time_call(lambda b=b: run(b))
+        derived = ";".join(f"{b}_us={times[b]:.1f}" for b in backends)
+        derived += f";vmap_speedup={times['scan'] / times['vmap']:.2f}x"
+        _row(f"backend_sweep.{sk.name}", times["vmap"], derived)
+
+
+# ---------------------------------------------------------------------------
+
+
 def scalability():
     """Fig. 14: multi-block kernels across host devices (8-dev subprocess
     — device count must be set before jax initializes)."""
@@ -225,6 +270,7 @@ def main() -> None:
     flat_vs_hier()
     simd_vote()
     jit_mode()
+    backend_sweep()
     scalability()
     roofline()
 

@@ -21,7 +21,7 @@ from . import flat as _flat
 from . import kernel_ir as K
 from .execute import CompiledKernel, compile_kernel
 from .frontend import Array, parse_kernel
-from .runtime import launch as _launch
+from .runtime import build_launcher as _build_launcher
 from .types import CoxUnsupported, DType, WARP_SIZE
 
 # dtype shorthands (annotation + c.shared dtype arguments)
@@ -35,9 +35,13 @@ b1 = DType.b1
 
 @dataclasses.dataclass
 class KernelFn:
-    """A parsed CUDA-style kernel plus a compile cache."""
+    """A parsed CUDA-style kernel plus two caches: the pass-pipeline
+    cache (``compiled``) and a launch-level cache of staged executables
+    keyed on the full launch geometry, so repeat launches skip both the
+    pass pipeline and the JAX retrace."""
     ir: K.Kernel
     _cache: Dict[Any, CompiledKernel] = dataclasses.field(default_factory=dict)
+    _launch_cache: Dict[Any, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def name(self) -> str:
@@ -65,13 +69,42 @@ class KernelFn:
     def launch(self, *, grid: int, block: int, args: Sequence[Any],
                collapse: str = "hybrid", mode: str = "normal",
                simd: bool = True, warp_size: int = WARP_SIZE,
-               mesh=None, axis: str = "data") -> Dict[str, Any]:
+               mesh=None, axis: str = "data", backend: str = "auto",
+               chunk: Optional[int] = None) -> Dict[str, Any]:
+        """Launch with backend dispatch (see ``repro.core.backends``):
+        backend='auto'|'scan'|'vmap'|'sharded'; ``chunk`` bounds how many
+        blocks the vmap-based backends run simultaneously."""
         ck = self.compiled(collapse=collapse, warp_size=warp_size, block=block)
-        return _launch(ck, grid=grid, block=block, args=args, mode=mode,
-                       simd=simd, mesh=mesh, axis=axis)
+        bname = _flat.choose_backend(self.ir, grid=grid, mesh=mesh,
+                                     requested=backend)
+        n_warps = -(-block // ck.warp_size)
+        mode = _flat.choose_mode(self.ir, n_warps=n_warps, requested=mode)
+        key = (id(ck), bname, mode, grid, block, n_warps, simd, chunk,
+               _mesh_key(mesh), axis)
+        cached = self._launch_cache.get(key)
+        if cached is None:
+            plan, exe = _build_launcher(
+                ck, grid=grid, block=block, mode=mode, simd=simd,
+                mesh=mesh, axis=axis, backend=bname, chunk=chunk)
+            cached = self._launch_cache[key] = (plan, exe)
+        plan, exe = cached
+        globals_, shapes, scalars = plan.bind_args(args)
+        out = exe(globals_, scalars)
+        return {k: v.reshape(shapes[k]) for k, v in out.items()}
 
     def uses_warp_features(self) -> bool:
         return K.uses_warp_features(self.ir)
+
+
+def _mesh_key(mesh) -> Any:
+    """A hashable stand-in for the mesh in launch-cache keys."""
+    if mesh is None:
+        return None
+    try:
+        hash(mesh)
+        return mesh
+    except TypeError:
+        return id(mesh)
 
 
 def kernel(fn=None, *, name: Optional[str] = None):

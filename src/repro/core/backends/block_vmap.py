@@ -1,0 +1,81 @@
+"""`vmap` backend — block-parallel execution.
+
+COX's host runtime (paper §4) forks one pthread per CUDA block because
+blocks are independent between grid-wide syncs.  This backend is the
+XLA rendition of that observation: ``jax.vmap`` over the compiled block
+function runs a *chunk* of blocks simultaneously — each on its own copy
+of global memory with write-mask/atomic-delta tracking — and the copies
+are reconciled by the shared merge module (single-writer stores selected
+exactly, atomic deltas summed).  An outer ``lax.scan`` walks the chunks
+so memory stays bounded at ``chunk × |globals|``.
+
+The chunk axis is what exposes inter-block parallelism to the host
+scheduler: XLA sees wide batched array ops instead of a length-`grid`
+sequential loop of narrow ones.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..execute import make_block_fn
+from . import merge
+from .plan import LaunchPlan
+
+name = "vmap"
+
+
+def run_chunked(plan: LaunchPlan, block_fn, bid_chunks, globals_,
+                scalars: Dict[str, Any], *, fold_deltas: bool
+                ) -> Tuple[Dict[str, Any], Dict[str, Any], Dict[str, Any]]:
+    """scan-over-chunks × vmap-within-chunk block executor.
+
+    ``bid_chunks`` is a (n_chunks, chunk) int32 table, -1 marking pad
+    slots.  Returns ``(globals, masks, deltas)`` where masks/deltas are
+    the union/sum over every executed block — the sharded backend feeds
+    them to :func:`merge.cross_device_merge`; the single-device caller
+    ignores them (``fold_deltas=True`` applies deltas in-line).
+    """
+    track = not fold_deltas
+    masks0 = merge.zeros_masks(globals_) if track else {}
+    deltas0 = (merge.zeros_deltas(globals_)
+               if track and plan.has_atomics else {})
+
+    def chunk_step(carry, bids):
+        g, m_acc, d_acc = carry
+        u = plan.uniforms(bids, scalars)            # bid: (chunk,)
+        u_axes = {k: (0 if k == "bid" else None) for k in u}
+        g2, m2, d2 = jax.vmap(lambda uu, gg: block_fn(uu, gg),
+                              in_axes=(u_axes, None))(u, g)
+        # pad slots (bid < 0) ran with garbage indices; their writes are
+        # discarded by zeroing the masks/deltas before the merge
+        valid = (bids >= 0)[:, None]
+        m2 = {k: v & valid for k, v in m2.items()}
+        d2 = {k: jnp.where(valid, v, 0) for k, v in d2.items()}
+        g, wrote, dsum = merge.merge_chunk(g, g2, m2, d2,
+                                           fold_deltas=fold_deltas)
+        if track:
+            m_acc = {k: m_acc[k] | wrote[k] for k in m_acc}
+            d_acc = {k: d_acc[k] + dsum[k] for k in d_acc}
+        return (g, m_acc, d_acc), None
+
+    (g, m, d), _ = lax.scan(chunk_step, (globals_, masks0, deltas0),
+                            jnp.asarray(bid_chunks))
+    return g, m, d
+
+
+def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
+    """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher."""
+    block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
+                             simd=plan.simd, track_writes=True)
+    bid_chunks = plan.chunked_bids()
+
+    def run(globals_, scalars):
+        g, _, _ = run_chunked(plan, block_fn, bid_chunks, globals_, scalars,
+                              fold_deltas=True)
+        return g
+
+    return jax.jit(run)

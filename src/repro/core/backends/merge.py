@@ -1,0 +1,100 @@
+"""Unified write-mask / atomic-delta merge semantics.
+
+Every backend that runs CUDA blocks on *copies* of global memory — a
+vmap chunk of blocks on one device, or one device's slice of the grid
+under shard_map — reconciles those copies here, under one contract:
+
+* **plain stores** are single-writer: the CUDA race-freedom contract
+  guarantees at most one block stores to a given element between
+  grid-wide syncs, so the merged value is *the* writer's value, selected
+  exactly (argmax over the write masks; no arithmetic on the payload —
+  merged stores are bitwise-identical to serial execution);
+* **atomics** are order-free reductions: each copy accumulates its own
+  delta buffer and deltas are summed across copies (and ``psum``-ed
+  across devices) — a *stronger* story than the paper, which has no
+  multi-device atomics at all;
+* elements nobody touched keep the carried-in value.
+
+Delta buffers live in the "numeric image" of the array dtype
+(:func:`num` — bool promotes to int32 so masks/flags can be atomic
+targets); :func:`denum` maps merged values back.
+
+Semantics note: within one merge scope (a chunk, or a device between
+merges) blocks do not observe each other's atomic updates.  CUDA makes
+no cross-block ordering promise, so any kernel for which this is
+observable is racy on real hardware too.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def num(x):
+    """Numeric image of an array (bool -> int32) for delta arithmetic."""
+    return x.astype(jnp.int32) if x.dtype == jnp.bool_ else x
+
+
+def denum(x, dt):
+    """Inverse of :func:`num` for a target dtype."""
+    return (x != 0) if dt == jnp.bool_ else x.astype(dt)
+
+
+def zeros_masks(globals_: Dict[str, Any]) -> Dict[str, Any]:
+    return {k: jnp.zeros(v.shape, jnp.bool_) for k, v in globals_.items()}
+
+
+def zeros_deltas(globals_: Dict[str, Any]) -> Dict[str, Any]:
+    """Accumulator buffers, already in the numeric image."""
+    return {k: jnp.zeros(v.shape, num(v).dtype) for k, v in globals_.items()}
+
+
+def merge_chunk(g: Dict[str, Any], chunk_g: Dict[str, Any],
+                chunk_m: Dict[str, Any], chunk_d: Dict[str, Any],
+                *, fold_deltas: bool
+                ) -> Tuple[Dict[str, Any], Dict[str, Any], Dict[str, Any]]:
+    """Merge a (chunk, N)-batched set of per-block copies into carry ``g``.
+
+    Returns ``(g_new, wrote_any, delta_sum)`` where ``wrote_any`` is the
+    per-array union of the chunk's write masks and ``delta_sum`` the
+    per-array summed deltas (numeric image; empty when the kernel has no
+    atomics).  With ``fold_deltas=True`` the summed deltas are applied
+    to ``g_new`` directly (single-device semantics); with ``False`` the
+    caller owns them (the cross-device ``psum`` path).
+    """
+    out: Dict[str, Any] = {}
+    wrote: Dict[str, Any] = {}
+    dsum: Dict[str, Any] = {}
+    for k in g:
+        m = chunk_m[k]
+        writer = jnp.argmax(m, axis=0)                      # (N,) block slot
+        val = jnp.take_along_axis(chunk_g[k], writer[None, :], axis=0)[0]
+        any_w = jnp.any(m, axis=0)
+        new = jnp.where(any_w, val, g[k])
+        if k in chunk_d:
+            d = jnp.sum(num(chunk_d[k]), axis=0)
+            dsum[k] = d
+            if fold_deltas:
+                new = denum(num(new) + d, g[k].dtype)
+        out[k] = new
+        wrote[k] = any_w
+    return out, wrote, dsum
+
+
+def cross_device_merge(g0: Dict[str, Any], g: Dict[str, Any],
+                       masks: Dict[str, Any], deltas: Dict[str, Any],
+                       axis: str) -> Dict[str, Any]:
+    """Reconcile per-device global-memory copies inside shard_map:
+    single-writer stores land via masked psum (disjoint by contract),
+    atomics via psum of the delta buffers (numeric image)."""
+    merged = {}
+    for k in g0:
+        stored = lax.psum(jnp.where(masks[k], num(g[k]), 0), axis)
+        cnt = lax.psum(masks[k].astype(jnp.int32), axis)
+        val = jnp.where(cnt > 0, stored.astype(num(g[k]).dtype), num(g0[k]))
+        if k in deltas:
+            val = val + lax.psum(deltas[k], axis)
+        merged[k] = denum(val, g0[k].dtype)
+    return merged

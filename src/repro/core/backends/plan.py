@@ -1,0 +1,104 @@
+"""LaunchPlan — everything a grid-execution backend needs, precomputed.
+
+A plan captures the launch geometry (grid, block, warps), the execution
+flavor (mode, simd), the chunking of block ids into re-dispatchable work
+units, and the arg-binding convention (arrays flattened to CUDA-pointer
+1-D views, scalars split off as block-uniform parameters).  Backends are
+pure functions of a plan; none of them re-derive this state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import kernel_ir as K
+from ..execute import CompiledKernel, walk_instrs
+from ..types import ArraySpec, CoxUnsupported
+
+DEFAULT_CHUNK = 8  # blocks run simultaneously per vmap step
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchPlan:
+    """Immutable description of one ``kernel<<<grid, block>>>`` launch."""
+    ck: CompiledKernel
+    grid: int
+    block: int
+    n_warps: int
+    mode: str            # 'normal' | 'jit' (resolved, never 'auto')
+    simd: bool
+    chunk: int           # blocks per vmap slice (1 = fully serial merge)
+    has_atomics: bool
+
+    @classmethod
+    def build(cls, ck: CompiledKernel, *, grid: int, block: int,
+              mode: str = "normal", simd: bool = True,
+              chunk: Optional[int] = None) -> "LaunchPlan":
+        if block <= 0 or grid <= 0:
+            raise ValueError("grid and block must be positive")
+        if block > 1024:
+            raise CoxUnsupported("CUDA blocks are limited to 1024 threads")
+        n_warps = -(-block // ck.warp_size)
+        if chunk is None:
+            chunk = min(grid, DEFAULT_CHUNK)
+        chunk = max(1, min(int(chunk), grid))
+        has_atomics = any(isinstance(s, K.AtomicRMW) for s in walk_instrs(ck))
+        return cls(ck, grid, block, n_warps, mode, simd, chunk, has_atomics)
+
+    # ---------------- arg binding ----------------
+
+    def bind_args(self, args: Sequence[Any]
+                  ) -> Tuple[Dict[str, Any], Dict[str, tuple], Dict[str, Any]]:
+        """Split positional args into (globals dict, shapes, scalar
+        uniforms); arrays are flattened (CUDA pointer semantics)."""
+        if len(args) != len(self.ck.kernel.params):
+            raise TypeError(f"kernel {self.ck.kernel.name} takes "
+                            f"{len(self.ck.kernel.params)} args, "
+                            f"got {len(args)}")
+        globals_: Dict[str, Any] = {}
+        shapes: Dict[str, tuple] = {}
+        scalars: Dict[str, Any] = {}
+        for spec, val in zip(self.ck.kernel.params, args):
+            if isinstance(spec, ArraySpec):
+                arr = jnp.asarray(val, spec.dtype.jnp)
+                shapes[spec.name] = arr.shape
+                globals_[spec.name] = arr.reshape(-1)
+            else:
+                scalars[spec.name] = jnp.asarray(val, spec.dtype.jnp)
+        return globals_, shapes, scalars
+
+    def uniforms(self, bid, scalars: Dict[str, Any]) -> Dict[str, Any]:
+        """The block-uniform environment for one block (or a batch of
+        blocks when ``bid`` carries a leading chunk axis)."""
+        u = {"bid": bid, "bdim": jnp.int32(self.block),
+             "gdim": jnp.int32(self.grid)}
+        u.update(scalars)
+        return u
+
+    # ---------------- chunking ----------------
+
+    def chunked_bids(self) -> np.ndarray:
+        """The whole grid's block ids as a (n_chunks, chunk) table,
+        -1-padded (the sharded backend instead reshapes its slice of
+        :func:`device_bid_table`)."""
+        n = self.grid
+        n_chunks = -(-n // self.chunk)
+        bids = np.full((n_chunks * self.chunk,), -1, np.int32)
+        bids[:n] = np.arange(n, dtype=np.int32)
+        return bids.reshape(n_chunks, self.chunk)
+
+    def device_bid_table(self, ndev: int) -> np.ndarray:
+        """Round-robin-contiguous block ids per device, shaped
+        (ndev, per_padded) with per_padded a multiple of ``chunk`` and
+        -1 marking idle-pad slots."""
+        per = -(-self.grid // ndev)
+        per_padded = -(-per // self.chunk) * self.chunk
+        table = np.full((ndev, per_padded), -1, np.int32)
+        flat = np.arange(self.grid, dtype=np.int32)
+        for d in range(ndev):
+            mine = flat[d * per:(d + 1) * per]
+            table[d, :len(mine)] = mine
+        return table

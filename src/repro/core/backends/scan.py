@@ -1,0 +1,35 @@
+"""`scan` backend — the loop-carried baseline.
+
+One ``lax.scan`` over block indices, carrying global memory: block *i*
+observes every write of blocks *< i* (a legal schedule; CUDA guarantees
+nothing about cross-block ordering between grid-wide syncs).  Minimal
+memory (one copy of global memory), zero merge cost, but the grid is
+fully serialized from XLA's point of view.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..execute import make_block_fn
+from .plan import LaunchPlan
+
+name = "scan"
+
+
+def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
+    """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher."""
+    block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
+                             simd=plan.simd)
+
+    def run(globals_, scalars):
+        def step(g, bid):
+            g2, _, _ = block_fn(plan.uniforms(bid, scalars), g)
+            return g2, None
+
+        g, _ = lax.scan(step, globals_,
+                        jnp.arange(plan.grid, dtype=jnp.int32))
+        return g
+
+    return jax.jit(run)

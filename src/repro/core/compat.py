@@ -1,0 +1,36 @@
+"""JAX version compatibility shims.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to
+``jax.shard_map`` (and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma``) across JAX releases.  Every call site in
+this repo goes through :func:`shard_map` below so a single import works
+on both sides of the move.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    _shard_map_impl = jax.shard_map          # jax >= 0.6
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """Version-portable ``shard_map``.
+
+    ``check_vma`` maps onto whichever replication-check kwarg the
+    installed JAX understands (``check_vma`` new, ``check_rep`` old);
+    ``None`` leaves the library default in place.
+    """
+    if check_vma is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kwargs["check_rep"] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)

@@ -125,7 +125,7 @@ class _Env:
                  uniforms: Dict[str, Any], warp_vars: Dict[str, Any],
                  block_vars: Dict[str, Any], shmem: Dict[str, Any],
                  globals_: Dict[str, Any], simd: bool,
-                 multi_device: bool = False,
+                 track_writes: bool = False,
                  store_masks: Optional[Dict[str, Any]] = None,
                  atomic_deltas: Optional[Dict[str, Any]] = None):
         self.ck = ck
@@ -145,7 +145,7 @@ class _Env:
         self.shmem = shmem
         self.globals = globals_
         self.simd = simd
-        self.multi_device = multi_device
+        self.track_writes = track_writes
         self.store_masks = store_masks if store_masks is not None else {}
         self.atomic_deltas = atomic_deltas if atomic_deltas is not None else {}
         self.lane = jnp.arange(self.W, dtype=jnp.int32)
@@ -276,7 +276,7 @@ def eval_expr(e: K.Expr, env: _Env):
         idx = eval_expr(e.index, env).astype(jnp.int32)
         arr = env.globals[e.array]
         val = arr.at[idx].get(mode="fill", fill_value=0)
-        if env.multi_device and e.array in env.atomic_deltas:
+        if env.track_writes and e.array in env.atomic_deltas:
             val = val + env.atomic_deltas[e.array].at[idx].get(
                 mode="fill", fill_value=0)
         return val
@@ -316,7 +316,7 @@ def exec_instr(ins, env: _Env, mask, *, jit_mode: bool):
         val = jnp.broadcast_to(
             jnp.asarray(eval_expr(ins.value, env)).astype(arr.dtype), m.shape)
         env.globals[ins.array] = arr.at[idx].set(val, mode="drop")
-        if env.multi_device:
+        if env.track_writes:
             sm = env.store_masks[ins.array]
             env.store_masks[ins.array] = sm.at[idx].set(True, mode="drop")
     elif isinstance(ins, K.StoreShared):
@@ -328,7 +328,7 @@ def exec_instr(ins, env: _Env, mask, *, jit_mode: bool):
         env.shmem[ins.array] = arr.at[idx].set(val, mode="drop")
     elif isinstance(ins, K.AtomicRMW):
         m = _store_mask(env, mask)
-        if env.multi_device:
+        if env.track_writes:
             tgt = env.atomic_deltas[ins.array]
         else:
             tgt = env.globals[ins.array]
@@ -344,7 +344,7 @@ def exec_instr(ins, env: _Env, mask, *, jit_mode: bool):
             new = tgt.at[idx].max(val, mode="drop")
         else:
             new = tgt.at[idx].min(val, mode="drop")
-        if env.multi_device:
+        if env.track_writes:
             env.atomic_deltas[ins.array] = new
         else:
             env.globals[ins.array] = new
@@ -381,10 +381,46 @@ def exec_instr(ins, env: _Env, mask, *, jit_mode: bool):
         raise CoxUnsupported(f"cannot execute {ins!r}")
 
 
+def _written_names(instrs) -> Tuple[Set[str], Set[str], Set[str]]:
+    """(variables, global arrays, shared arrays) a statement list may
+    write, descending into If/While — the minimal lax carry for a loop."""
+    wv: Set[str] = set()
+    arrays: Set[str] = set()
+    sh: Set[str] = set()
+    stack = list(instrs)
+    while stack:
+        s = stack.pop()
+        if isinstance(s, K.Assign):
+            wv.add(s.name)
+        elif isinstance(s, K.StoreGlobal):
+            arrays.add(s.array)
+        elif isinstance(s, K.StoreShared):
+            sh.add(s.array)
+        elif isinstance(s, K.AtomicRMW):
+            arrays.add(s.array)
+            if s.dst:
+                wv.add(s.dst)
+        elif isinstance(s, WarpBufStore):
+            wv.add(s.buf)
+        elif isinstance(s, WarpBufCompute):
+            wv.add(s.dst)
+        elif isinstance(s, K.If):
+            stack.extend(s.then_body)
+            stack.extend(s.else_body)
+        elif isinstance(s, K.While):
+            stack.extend(s.body)
+    return wv, arrays, sh
+
+
 def _exec_masked_while(ins: K.While, env: _Env, mask, *, jit_mode: bool):
     """Barrier-free loop with potentially lane-divergent trip counts:
     iterate while any lane is active, with per-lane masking (the
-    whole-function-vectorization treatment of divergent loops)."""
+    whole-function-vectorization treatment of divergent loops).
+
+    The lax carry holds only the state the body can write — carrying the
+    full env (in particular the global-memory dict) would make every
+    batched/vmapped execution of the loop select over whole arrays per
+    iteration just to freeze finished instances."""
     if jit_mode and ins.static_trip is not None and ins.static_trip <= _UNROLL_LIMIT:
         for _ in range(ins.static_trip):
             cond = jnp.broadcast_to(
@@ -394,9 +430,30 @@ def _exec_masked_while(ins: K.While, env: _Env, mask, *, jit_mode: bool):
         return
 
     mask_in = jnp.ones((env.W,), jnp.bool_) if mask is None else mask
+    wv, arrays, sh = _written_names(ins.body)
+
+    def snap():
+        return {
+            "wv": {k: v for k, v in env.warp_vars.items() if k in wv},
+            "bv": {k: v for k, v in env.block_vars.items() if k in wv},
+            "sh": {k: env.shmem[k] for k in sh if k in env.shmem},
+            "g": {k: env.globals[k] for k in arrays if k in env.globals},
+            "sm": {k: env.store_masks[k] for k in arrays
+                   if k in env.store_masks},
+            "ad": {k: env.atomic_deltas[k] for k in arrays
+                   if k in env.atomic_deltas},
+        }
+
+    def load(st):
+        env.warp_vars.update(st["wv"])
+        env.block_vars.update(st["bv"])
+        env.shmem.update(st["sh"])
+        env.globals.update(st["g"])
+        env.store_masks.update(st["sm"])
+        env.atomic_deltas.update(st["ad"])
 
     def active(st) -> Any:
-        env.load(st)
+        load(st)
         cond = jnp.broadcast_to(
             eval_expr(ins.cond, env).astype(jnp.bool_), (env.W,))
         return mask_in & cond
@@ -407,10 +464,10 @@ def _exec_masked_while(ins: K.While, env: _Env, mask, *, jit_mode: bool):
     def body_f(st):
         m = active(st)  # load(st) happened inside
         exec_instrs(ins.body, env, m, jit_mode=jit_mode)
-        return env.state()
+        return snap()
 
-    st = lax.while_loop(cond_f, body_f, env.state())
-    env.load(st)
+    st = lax.while_loop(cond_f, body_f, snap())
+    load(st)
 
 
 # ---------------------------------------------------------------------------
@@ -502,7 +559,7 @@ def _try_linear(g) -> Optional[List[WarpPR]]:
 
 
 def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
-                  simd: bool = True, multi_device: bool = False):
+                  simd: bool = True, track_writes: bool = False):
     """Build ``f(uniforms, globals[, masks, deltas]) -> (globals, masks,
     deltas)`` executing one CUDA block.  ``uniforms`` must contain bid,
     bdim, gdim and every scalar kernel parameter."""
@@ -517,7 +574,7 @@ def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
             for v, c in ck.classes.items() if c == "block"}
         shmem = {s.name: jnp.zeros((_prod(s.shape),), s.dtype.jnp)
                  for s in ck.kernel.shared}
-        if multi_device:
+        if track_writes:
             store_masks = store_masks if store_masks is not None else {
                 k: jnp.zeros(v.shape, jnp.bool_) for k, v in globals_.items()}
             atomic_deltas = atomic_deltas if atomic_deltas is not None else ({
@@ -532,7 +589,7 @@ def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
                 bv, sh, g, sm, ad, _ = carry
                 env = _Env(ck, wid=wid, n_warps=n_warps, uniforms=uniforms,
                            warp_vars={}, block_vars=bv, shmem=sh, globals_=g,
-                           simd=simd, multi_device=multi_device,
+                           simd=simd, track_writes=track_writes,
                            store_masks=sm, atomic_deltas=ad)
                 ex = run_warp_graph(node, env, jit_mode=jit_mode)
                 return (env.block_vars, env.shmem, env.globals,
@@ -603,6 +660,11 @@ def _try_linear_block(machine: Machine) -> Optional[List[BlockPR]]:
         out.append(node)
         cur = node.succ_ids[0] if node.succ_ids else EXIT
     return out
+
+
+def walk_instrs(ck: CompiledKernel):
+    """Yield every instruction in the kernel, descending into If/While."""
+    return _all_instrs(ck)
 
 
 def _all_instrs(ck: CompiledKernel):

@@ -1,59 +1,59 @@
 """COX runtime: grid launch (the paper §4 host side).
 
-The paper forks one pthread per CUDA block.  Here the grid is functional:
+The paper forks one pthread per CUDA block.  Here the grid is functional
+and the schedule is a pluggable *backend* (``repro.core.backends``):
 
-* single device — ``lax.scan`` over block indices, carrying global
-  memory (a legal schedule: CUDA guarantees nothing about cross-block
-  ordering between grid-wide syncs);
-* multi device — blocks are sharded round-robin-contiguously over a mesh
-  axis with ``shard_map``; each device runs its blocks on its own copy of
-  global memory and the copies are merged with write-masks (plain
-  stores; disjoint by the CUDA race-freedom contract) and ``psum`` of
-  deltas (atomics — a *stronger* story than the paper, which has none).
+* ``scan``    — single device, ``lax.scan`` over block indices carrying
+  global memory (a legal schedule: CUDA guarantees nothing about
+  cross-block ordering between grid-wide syncs);
+* ``vmap``    — single device, chunks of blocks run simultaneously via
+  ``jax.vmap`` over the block function; per-block copies of global
+  memory are reconciled with single-writer write-masks + summed atomic
+  deltas (``backends/merge.py``);
+* ``sharded`` — blocks dealt round-robin-contiguously over a mesh axis
+  with ``shard_map``; within each device the same vmap executor runs,
+  and device copies merge with masked ``psum`` stores + ``psum`` of
+  atomic deltas (a *stronger* story than the paper, which has none).
 
-Straggler note for the 1000-node posture: blocks are pure functions of
-(bid, inputs), so any chunk can be re-executed anywhere; the launcher
-exposes ``chunk`` to slice the grid into re-dispatchable work units.
+``backend="auto"`` (default) applies ``flat.choose_backend``'s
+heuristic.  Straggler note for the 1000-node posture: blocks are pure
+functions of (bid, inputs), so any chunk can be re-executed anywhere;
+``chunk`` slices the grid into re-dispatchable work units.
 """
 from __future__ import annotations
 
-import functools
-import math
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from . import kernel_ir as K
-from .execute import CompiledKernel, make_block_fn
-from .types import ArraySpec, CoxUnsupported, ScalarSpec
+from . import backends as _backends
+from . import flat as _flat
+from .backends.plan import LaunchPlan
+from .execute import CompiledKernel
 
 
-def _bind_args(ck: CompiledKernel, args: Sequence[Any]):
-    """Split positional args into (globals dict, scalar uniforms dict);
-    arrays are flattened (CUDA pointer semantics) and shapes remembered."""
-    if len(args) != len(ck.kernel.params):
-        raise TypeError(f"kernel {ck.kernel.name} takes "
-                        f"{len(ck.kernel.params)} args, got {len(args)}")
-    globals_: Dict[str, Any] = {}
-    shapes: Dict[str, tuple] = {}
-    scalars: Dict[str, Any] = {}
-    for spec, val in zip(ck.kernel.params, args):
-        if isinstance(spec, ArraySpec):
-            arr = jnp.asarray(val, spec.dtype.jnp)
-            shapes[spec.name] = arr.shape
-            globals_[spec.name] = arr.reshape(-1)
-        else:
-            scalars[spec.name] = jnp.asarray(val, spec.dtype.jnp)
-    return globals_, shapes, scalars
+def build_launcher(ck: CompiledKernel, *, grid: int, block: int,
+                   mode: str = "normal", simd: bool = True,
+                   mesh: Optional[Mesh] = None, axis: str = "data",
+                   backend: str = "auto", chunk: Optional[int] = None):
+    """Resolve (backend, mode), build the plan, and stage the jitted
+    executable.  Returns ``(plan, exe)`` with
+    ``exe(globals_, scalars) -> {name: flat array}``."""
+    bname = _flat.choose_backend(ck.kernel, grid=grid, mesh=mesh,
+                                 requested=backend)
+    n_warps = -(-block // ck.warp_size)
+    mode = _flat.choose_mode(ck.kernel, n_warps=n_warps, requested=mode)
+    plan = LaunchPlan.build(ck, grid=grid, block=block, mode=mode,
+                            simd=simd, chunk=chunk)
+    exe = _backends.get_backend(bname).build(plan, mesh=mesh, axis=axis)
+    return plan, exe
 
 
 def launch(ck: CompiledKernel, *, grid: int, block: int, args: Sequence[Any],
            mode: str = "normal", simd: bool = True,
            mesh: Optional[Mesh] = None, axis: str = "data",
+           backend: str = "auto", chunk: Optional[int] = None,
            donate: bool = False) -> Dict[str, jnp.ndarray]:
     """Run ``kernel<<<grid, block>>>(*args)``; returns {array name: value}.
 
@@ -61,118 +61,15 @@ def launch(ck: CompiledKernel, *, grid: int, block: int, args: Sequence[Any],
     trace is already shape-specialized, so the paper's JIT mode (grid/
     block burned in, loops unrolled) only bloats the program; the Fig-13
     advantage does NOT transfer (EXPERIMENTS.md §Benchmarks).  mode='jit'
-    remains available for the comparison."""
-    if block <= 0 or grid <= 0:
-        raise ValueError("grid and block must be positive")
-    if block > 1024:
-        raise CoxUnsupported("CUDA blocks are limited to 1024 threads")
-    W = ck.warp_size
-    n_warps = -(-block // W)
-    globals_, shapes, scalars = _bind_args(ck, args)
+    remains available for the comparison, mode='auto' picks per block
+    shape.
 
-    if mesh is None:
-        out = _launch_single(ck, grid, block, n_warps, scalars, globals_,
-                             mode, simd)
-    else:
-        out = _launch_sharded(ck, grid, block, n_warps, scalars, globals_,
-                              mode, simd, mesh, axis)
+    This is the uncached entry point; ``KernelFn.launch`` adds a
+    launch-level compile cache so repeat launches skip retracing.
+    """
+    plan, exe = build_launcher(ck, grid=grid, block=block, mode=mode,
+                               simd=simd, mesh=mesh, axis=axis,
+                               backend=backend, chunk=chunk)
+    globals_, shapes, scalars = plan.bind_args(args)
+    out = exe(globals_, scalars)
     return {k: v.reshape(shapes[k]) for k, v in out.items()}
-
-
-# ---------------------------------------------------------------------------
-
-
-def _launch_single(ck, grid, block, n_warps, scalars, globals_, mode, simd):
-    block_fn = make_block_fn(ck, n_warps=n_warps, mode=mode, simd=simd)
-
-    def uniforms_for(bid):
-        u = {"bid": bid, "bdim": jnp.int32(block), "gdim": jnp.int32(grid)}
-        u.update(scalars)
-        return u
-
-    def step(g, bid):
-        g2, _, _ = block_fn(uniforms_for(bid), g)
-        return g2, None
-
-    def run(g):
-        g, _ = lax.scan(step, g, jnp.arange(grid, dtype=jnp.int32))
-        return g
-
-    return jax.jit(run)(globals_)
-
-
-def _launch_sharded(ck, grid, block, n_warps, scalars, globals_, mode, simd,
-                    mesh, axis):
-    ndev = mesh.shape[axis]
-    per = -(-grid // ndev)  # blocks per device (last device may idle-pad)
-    block_fn = make_block_fn(ck, n_warps=n_warps, mode=mode, simd=simd,
-                             multi_device=True)
-    has_atomics = any(isinstance(s, K.AtomicRMW) for s in _walk_instrs(ck))
-
-    def device_fn(dev_bids, g0):
-        # local view of the sharded (ndev, per) id table is (1, per):
-        # flatten to this device's (per,) block ids (−1 = padding)
-        dev_bids = dev_bids.reshape(-1)
-        masks = {k: jnp.zeros(v.shape, jnp.bool_) for k, v in g0.items()}
-        deltas = ({k: jnp.zeros_like(v) for k, v in g0.items()}
-                  if has_atomics else {})
-
-        def step(carry, bid):
-            g, m, d = carry
-            u = {"bid": bid, "bdim": jnp.int32(block),
-                 "gdim": jnp.int32(grid)}
-            u.update(scalars)
-            g2, m2, d2 = block_fn(u, g, m, d)
-            skip = bid < 0
-            g = jax.tree_util.tree_map(
-                lambda a, b: jnp.where(skip, a, b), g, g2)
-            m = jax.tree_util.tree_map(
-                lambda a, b: jnp.where(skip, a, b), m, m2)
-            d = jax.tree_util.tree_map(
-                lambda a, b: jnp.where(skip, a, b), d, d2)
-            return (g, m, d), None
-
-        (g, m, d), _ = lax.scan(step, (g0, masks, deltas), dev_bids)
-
-        # merge across devices: single-writer stores + summed atomics
-        merged = {}
-        for k in g0:
-            stored = lax.psum(jnp.where(m[k], _num(g[k]), 0), axis)
-            cnt = lax.psum(m[k].astype(jnp.int32), axis)
-            val = jnp.where(cnt > 0, stored.astype(_num(g[k]).dtype), _num(g0[k]))
-            if has_atomics and k in d:
-                val = val + lax.psum(_num(d[k]), axis)
-            merged[k] = _denum(val, g0[k].dtype)
-        return merged
-
-    bids = np.full((ndev * per,), -1, np.int32)
-    bids[:grid] = np.arange(grid, dtype=np.int32)
-    bids = jnp.asarray(bids.reshape(ndev, per))
-
-    in_specs = (P(axis), P())     # bids sharded; globals replicated
-    out_specs = P()
-
-    fn = jax.shard_map(device_fn, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
-    return jax.jit(fn)(bids, globals_)
-
-
-def _num(x):
-    return x.astype(jnp.int32) if x.dtype == jnp.bool_ else x
-
-
-def _denum(x, dt):
-    return (x != 0) if dt == jnp.bool_ else x.astype(dt)
-
-
-def _walk_instrs(ck: CompiledKernel):
-    for blk in ck.cfg.blocks.values():
-        stack = list(blk.instrs)
-        while stack:
-            s = stack.pop()
-            yield s
-            if isinstance(s, K.If):
-                stack.extend(s.then_body)
-                stack.extend(s.else_body)
-            elif isinstance(s, K.While):
-                stack.extend(s.body)

@@ -157,12 +157,20 @@ def _dot_flops(rhs: str, comp: Computation) -> float:
             if depth == 0:
                 end = i
                 break
-    args = [a.strip().lstrip("%") for a in inner[:end].split(",")]
+    seg = inner[:end]
     km = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
-    if not args or not km:
+    if not seg or not km:
         return 0.0
-    lhs_ty = comp.types.get(args[0], "")
-    _, lhs_dims = _dims(lhs_ty)
+    # newer HLO prints operand types inline — 'dot(f32[256,64]{1,0} %x, …)'
+    # — so the first shape token inside the parens IS the lhs type;
+    # older HLO prints bare operand names resolved via the symbol table
+    tm = _SHAPE.search(seg)
+    if tm:
+        lhs_dims = ([int(d) for d in tm.group(2).split(",")]
+                    if tm.group(2) else [])
+    else:
+        args = [a.strip().lstrip("%") for a in seg.split(",")]
+        _, lhs_dims = _dims(comp.types.get(args[0], "")) if args else ("", [])
     contracted = 1
     for ix in km.group(1).split(","):
         if ix != "" and int(ix) < len(lhs_dims):
@@ -220,3 +228,23 @@ def accumulate(comps: Dict[str, Computation],
 
 def analyze(hlo_text: str) -> Dict[str, float]:
     return accumulate(parse_hlo(hlo_text))
+
+
+def xla_cost(compiled) -> Dict[str, float]:
+    """Normalized ``compiled.cost_analysis()``.
+
+    Depending on the JAX version this returns a dict or a one-entry
+    list of per-partition dicts; older multi-partition builds return
+    one dict per partition, which are summed here.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, dict):
+        return dict(ca)
+    out: Dict[str, float] = {}
+    for part in ca:
+        for k, v in part.items():
+            if isinstance(v, (int, float)):
+                out[k] = out.get(k, 0.0) + v
+            else:
+                out.setdefault(k, v)
+    return out

@@ -320,7 +320,8 @@ def moe_apply(p, x, *, cfg, rules=None):
         y = jax.lax.psum(y, "model")
         return y.reshape(Bl, Sl, d).astype(xb.dtype)
 
-    y = jax.shard_map(
+    from repro.core.compat import shard_map
+    y = shard_map(
         local, mesh=mesh,
         in_specs=(x_spec, router_spec, ew_spec, ew_spec, ew_spec),
         out_specs=x_spec, check_vma=False,

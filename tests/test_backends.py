@@ -1,0 +1,168 @@
+"""Backend equivalence: scan ≡ vmap ≡ sharded.
+
+The grid-execution backends (repro.core.backends) must agree exactly —
+plain stores are single-writer-selected (no arithmetic on the payload),
+so vmap/sharded outputs are bitwise-identical to the loop-carried scan
+baseline; atomic deltas are integer-valued in these kernels, so their
+sums are exact too.  Covers the full coverage suite (warp-feature
+kernels included), atomics, grid sizes not divisible by the chunk size,
+and the launch-cache / heuristic plumbing.
+"""
+import numpy as np
+import pytest
+
+from benchmarks.kernels_suite import EXTRA_KERNELS, all_kernels
+from repro.core import cox
+from repro.core import flat as cox_flat
+from repro.core.backends import available_backends, get_backend
+from repro.core.backends.plan import LaunchPlan
+
+RUNNABLE = [sk for sk in all_kernels() if sk.kernel is not None]
+
+
+def _launch(sk, args=None, **kw):
+    # make_args draws fresh RNG data — callers comparing backends must
+    # build args once and pass them to every launch
+    out = sk.kernel.launch(grid=sk.grid, block=sk.block,
+                           args=sk.make_args() if args is None else args,
+                           **kw)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+@pytest.mark.parametrize("sk", RUNNABLE, ids=lambda sk: sk.name)
+def test_vmap_bitwise_matches_scan(sk):
+    """Full suite, chunk=3 so most grids (1, 2, 8, 16, 64) leave a
+    ragged -1-padded tail chunk."""
+    args = sk.make_args()
+    want = _launch(sk, args, backend="scan")
+    got = _launch(sk, args, backend="vmap", chunk=3)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k],
+                                      err_msg=f"{sk.name}.{k}")
+
+
+@pytest.mark.parametrize("name", ["vectorAdd", "MatrixMulCUDA", "reduce4",
+                                  "shfl_scan_test", "VoteAnyKernel3",
+                                  "histogram64", "blockCounter"])
+def test_sharded_matches_scan_on_one_device_mesh(name):
+    """shard_map × vmap recomposition on an in-process 1-device mesh
+    (8-device semantics live in test_multidevice.py); representative
+    features: plain, block-cg, warp-cg, shuffle, vote, atomics."""
+    import jax
+    sk = next(k for k in all_kernels() if k.name == name)
+    mesh = jax.make_mesh((1,), ("data",))
+    args = sk.make_args()
+    want = _launch(sk, args, backend="scan")
+    got = _launch(sk, args, mesh=mesh, chunk=3)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k],
+                                      err_msg=f"{name}.{k}")
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 5, 7, 64])
+def test_vmap_chunk_sizes_including_indivisible(chunk):
+    sk = next(k for k in EXTRA_KERNELS if k.name == "histogram64")  # grid=16
+    args = sk.make_args()
+    want = _launch(sk, args, backend="scan")
+    got = _launch(sk, args, backend="vmap", chunk=chunk)
+    np.testing.assert_array_equal(got["hist"], want["hist"])
+
+
+def test_atomics_plus_stores_in_one_kernel():
+    sk = next(k for k in EXTRA_KERNELS if k.name == "blockCounter")
+    args = sk.make_args()
+    want = _launch(sk, args, backend="scan")
+    for backend, kw in (("vmap", {"chunk": 3}), ("vmap", {"chunk": 8})):
+        got = _launch(sk, args, backend=backend, **kw)
+        np.testing.assert_array_equal(got["total"], want["total"])
+        np.testing.assert_array_equal(got["partial"], want["partial"])
+    assert want["total"][0] == 900
+
+
+# ---------------------------------------------------------------------------
+# dispatch heuristic + plumbing
+# ---------------------------------------------------------------------------
+
+
+@cox.kernel
+def _k_id(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    out[i] = a[i]
+
+
+def test_choose_backend_heuristic():
+    # streaming SPMD kernel: loop-carried scan wins regardless of grid
+    assert cox_flat.choose_backend(_k_id.ir, grid=1) == "scan"
+    assert cox_flat.choose_backend(_k_id.ir, grid=8) == "scan"
+    # blockwise internal work (shared-memory tiles / atomics): vmap,
+    # unless there is only one block
+    shared_k = next(k for k in all_kernels() if k.name == "MatrixMulCUDA")
+    atomic_k = next(k for k in all_kernels() if k.name == "histogram64")
+    assert cox_flat.choose_backend(shared_k.kernel.ir, grid=16) == "vmap"
+    assert cox_flat.choose_backend(atomic_k.kernel.ir, grid=16) == "vmap"
+    assert cox_flat.choose_backend(shared_k.kernel.ir, grid=1) == "scan"
+    assert cox_flat.choose_backend(_k_id.ir, grid=8, mesh=object()) \
+        == "sharded"
+    assert cox_flat.choose_backend(_k_id.ir, grid=8, requested="scan") \
+        == "scan"
+    with pytest.raises(ValueError):
+        cox_flat.choose_backend(_k_id.ir, grid=8, requested="sharded")
+    with pytest.raises(ValueError):
+        cox_flat.choose_backend(_k_id.ir, grid=8, mesh=object(),
+                                requested="vmap")
+    with pytest.raises(ValueError):
+        cox_flat.choose_backend(_k_id.ir, grid=8, requested="pthread")
+
+
+def test_choose_mode_auto_unrolls_single_warp():
+    assert cox_flat.choose_mode(_k_id.ir, n_warps=1, requested="auto") \
+        == "jit"
+    assert cox_flat.choose_mode(_k_id.ir, n_warps=8, requested="auto") \
+        == "normal"
+    assert cox_flat.choose_mode(_k_id.ir, n_warps=1, requested="normal") \
+        == "normal"
+
+
+def test_backend_registry():
+    assert set(available_backends()) == {"scan", "vmap", "sharded"}
+    with pytest.raises(ValueError):
+        get_backend("pthread")
+
+
+def test_launch_plan_chunking():
+    ck = _k_id.compiled(block=64)
+    plan = LaunchPlan.build(ck, grid=5, block=64, chunk=2)
+    table = plan.chunked_bids()
+    assert table.shape == (3, 2)
+    assert table.tolist() == [[0, 1], [2, 3], [4, -1]]
+    dev = plan.device_bid_table(2)     # per=3, padded to chunk multiple 4
+    assert dev.shape == (2, 4)
+    assert dev[0].tolist() == [0, 1, 2, -1]
+    assert dev[1].tolist() == [3, 4, -1, -1]
+
+
+def test_launch_cache_hits_on_repeat_and_splits_on_geometry():
+    a = np.ones(128, np.float32)
+    _k_id.launch(grid=2, block=64, args=(np.zeros(128, np.float32), a))
+    n1 = len(_k_id._launch_cache)
+    _k_id.launch(grid=2, block=64, args=(np.zeros(128, np.float32), a))
+    assert len(_k_id._launch_cache) == n1          # repeat launch: cache hit
+    _k_id.launch(grid=2, block=64, args=(np.zeros(128, np.float32), a),
+                 backend="vmap")
+    assert len(_k_id._launch_cache) == n1 + 1      # new backend: new entry
+
+
+def test_scalar_args_do_not_retrace():
+    """Scalar uniforms are traced arguments of the cached executable, so
+    new scalar values reuse the staged computation."""
+    sk = next(k for k in all_kernels() if k.name == "vectorAdd")
+    out0, a, b, _ = sk.make_args()
+    sk.kernel.launch(grid=sk.grid, block=sk.block, args=(out0, a, b, 512))
+    n1 = len(sk.kernel._launch_cache)
+    got = sk.kernel.launch(grid=sk.grid, block=sk.block,
+                           args=(out0, a, b, 100))
+    assert len(sk.kernel._launch_cache) == n1
+    want = np.asarray(a[:100]) + np.asarray(b[:100])
+    np.testing.assert_allclose(np.asarray(got["out"])[:100], want)
+    np.testing.assert_array_equal(np.asarray(got["out"])[100:],
+                                  np.zeros(412, np.float32))

@@ -3,7 +3,9 @@ the independent per-thread oracle on randomized kernels and inputs, and
 system invariants hold across modes."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import cox
 from repro.core.oracle import run_grid as oracle_run

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import registry
-from repro.launch.hlo_analysis import analyze
+from repro.launch.hlo_analysis import analyze, xla_cost
 from repro.models import lm
 from repro.models.params import tree_abstract
 
@@ -44,7 +44,7 @@ def test_scan_corrected_flops_match_unrolled():
         <= 0.01 * a_unroll["flops"]
     # and within 10% of XLA's own count on the unrolled module
     # (we count dot FLOPs only; XLA adds elementwise)
-    xla = c_unroll.cost_analysis()["flops"]
+    xla = xla_cost(c_unroll)["flops"]
     assert a_unroll["flops"] <= xla
     assert a_unroll["flops"] >= 0.85 * xla
 
@@ -55,5 +55,5 @@ def test_scan_correction_is_large():
                               n_layers=4, remat="none")
     c = _compile(cfg, unroll=False)
     corrected = analyze(c.as_text())["flops"]
-    raw = c.cost_analysis()["flops"]
+    raw = xla_cost(c)["flops"]
     assert corrected > 1.5 * raw  # 4 scanned layers counted once in raw
