@@ -97,14 +97,23 @@ class KernelFn:
 
 
 def _mesh_key(mesh) -> Any:
-    """A hashable stand-in for the mesh in launch-cache keys."""
+    """A hashable stand-in for the mesh in launch-cache keys, built from
+    stable content (axis names/sizes + device ids).  Object identity is
+    NOT a safe key: ``id()`` of a garbage-collected mesh can be recycled
+    by a new mesh, which would then hit a stale executable closed over
+    the old devices."""
     if mesh is None:
         return None
+    try:
+        return ("mesh", tuple(mesh.shape.items()),
+                tuple(d.id for d in mesh.devices.flat))
+    except (AttributeError, TypeError):
+        pass
     try:
         hash(mesh)
         return mesh
     except TypeError:
-        return id(mesh)
+        return ("unhashable-mesh", id(mesh), repr(mesh))
 
 
 def kernel(fn=None, *, name: Optional[str] = None):

@@ -69,6 +69,7 @@ def run_chunked(plan: LaunchPlan, block_fn, bid_chunks, globals_,
 
 def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
     """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher."""
+    plan.check_mergeable(name)
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
                              simd=plan.simd, track_writes=True)
     bid_chunks = plan.chunked_bids()

@@ -20,9 +20,13 @@ Delta buffers live in the "numeric image" of the array dtype
 targets); :func:`denum` maps merged values back.
 
 Semantics note: within one merge scope (a chunk, or a device between
-merges) blocks do not observe each other's atomic updates.  CUDA makes
-no cross-block ordering promise, so any kernel for which this is
-observable is racy on real hardware too.
+merges) blocks do not observe each other's atomic updates.  For
+order-free reductions that never inspect intermediate state this is
+unobservable.  It IS observable to kernels that capture atomic old
+values (the atomicAdd ticket pattern — valid and deterministic on CUDA,
+where old values are unique across blocks), so those kernels are
+rejected by the vmap/sharded builds (``LaunchPlan.check_mergeable``)
+and kept on the serial scan backend by the ``auto`` heuristic.
 """
 from __future__ import annotations
 

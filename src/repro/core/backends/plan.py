@@ -32,6 +32,7 @@ class LaunchPlan:
     simd: bool
     chunk: int           # blocks per vmap slice (1 = fully serial merge)
     has_atomics: bool
+    captures_atomic_old: bool  # AtomicRMW with dst — serial-only
 
     @classmethod
     def build(cls, ck: CompiledKernel, *, grid: int, block: int,
@@ -45,8 +46,25 @@ class LaunchPlan:
         if chunk is None:
             chunk = min(grid, DEFAULT_CHUNK)
         chunk = max(1, min(int(chunk), grid))
-        has_atomics = any(isinstance(s, K.AtomicRMW) for s in walk_instrs(ck))
-        return cls(ck, grid, block, n_warps, mode, simd, chunk, has_atomics)
+        atomics = [s for s in walk_instrs(ck) if isinstance(s, K.AtomicRMW)]
+        return cls(ck, grid, block, n_warps, mode, simd, chunk,
+                   has_atomics=bool(atomics),
+                   captures_atomic_old=any(s.dst for s in atomics))
+
+    def check_mergeable(self, backend: str):
+        """Reject launches whose semantics the write-mask / atomic-delta
+        merge cannot reproduce.  Captured atomic old values (the
+        atomicAdd ticket pattern) are unique only under serial
+        execution — per-copy delta buffers would hand every block the
+        same ticket — so such kernels are scan-only."""
+        if self.captures_atomic_old:
+            raise CoxUnsupported(
+                f"kernel '{self.ck.kernel.name}' captures atomic old "
+                f"values (atomic_add_old): old values are only unique "
+                f"under serial execution, which the {backend!r} "
+                f"backend's delta merge cannot reproduce — launch "
+                f"without a mesh and use backend='scan' (the "
+                f"single-device 'auto' heuristic picks it)")
 
     # ---------------- arg binding ----------------
 

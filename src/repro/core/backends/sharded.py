@@ -28,6 +28,7 @@ def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
     """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher."""
     if mesh is None:
         raise ValueError("the sharded backend needs a mesh")
+    plan.check_mergeable(name)
     ndev = mesh.shape[axis]
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
                              simd=plan.simd, track_writes=True)

@@ -336,6 +336,18 @@ def exec_instr(ins, env: _Env, mask, *, jit_mode: bool):
         val = jnp.broadcast_to(
             jnp.asarray(eval_expr(ins.value, env)).astype(tgt.dtype), m.shape)
         if ins.dst:
+            if env.track_writes:
+                # tgt is the per-block delta buffer (zeroed per block),
+                # NOT the value a serial execution would observe, and
+                # cross-block uniqueness of captured old values (ticket
+                # patterns) cannot hold under delta merging at all.
+                # LaunchPlan.check_mergeable rejects such launches
+                # before tracing; this guard catches any future
+                # make_block_fn caller that skips it.
+                raise CoxUnsupported(
+                    "atomic old-value capture under write-tracking: "
+                    "captured old values are only exact under serial "
+                    "execution — use the scan backend")
             old = tgt.at[jnp.where(m, idx, 0)].get(mode="fill", fill_value=0)
             env.write_var(ins.dst, old, mask)
         if ins.op == "add":

@@ -73,6 +73,14 @@ def choose_collapse(kernel: K.Kernel, requested: str = "hybrid") -> str:
 _BACKENDS = ("scan", "vmap", "sharded")
 
 
+def captures_atomic_old(kernel: K.Kernel) -> bool:
+    """True when any AtomicRMW captures the pre-op value (the atomicAdd
+    ticket pattern).  Such kernels observe atomic *intermediate* state —
+    old values are unique only under serial execution, so the
+    delta-merge backends (vmap/sharded) cannot reproduce them."""
+    return any(isinstance(s, K.AtomicRMW) and s.dst for s in kernel.walk())
+
+
 def choose_backend(kernel: K.Kernel, *, grid: int, mesh=None,
                    requested: str = "auto") -> str:
     """Pick a grid-execution backend (paper §4's one-pthread-per-block,
@@ -88,6 +96,14 @@ def choose_backend(kernel: K.Kernel, *, grid: int, mesh=None,
     one pass over global memory that block-batching cannot beat; a
     single-block grid always degenerates to ``scan`` (nothing to
     parallelize, and the loop-carried path skips mask tracking).
+
+    Kernels that capture atomic old values (:func:`captures_atomic_old`)
+    stay on ``scan``: captured old values are only unique under serial
+    execution, and the delta-merge backends would silently hand every
+    block the same ticket.  An *explicit* vmap/sharded request for such
+    a kernel is rejected at backend build time — as is any launch with
+    a mesh (a mesh forces ``sharded``, whose merge cannot reproduce
+    ticket semantics; drop the mesh to run these kernels).
     """
     if requested != "auto":
         if requested not in _BACKENDS:
@@ -101,7 +117,7 @@ def choose_backend(kernel: K.Kernel, *, grid: int, mesh=None,
         return requested
     if mesh is not None:
         return "sharded"
-    if grid <= 1:
+    if grid <= 1 or captures_atomic_old(kernel):
         return "scan"
     blockwise_work = bool(kernel.shared) or \
         any(isinstance(s, K.AtomicRMW) for s in kernel.walk())

@@ -141,6 +141,26 @@ def _bytes_of_all(ty: str) -> int:
                re.findall(r"\w+\[[\d,]*\](?:\{[^}]*\})?", ty)) or 0
 
 
+def _split_top_level(seg: str) -> List[str]:
+    """Split an HLO operand list on commas at bracket depth 0 (shape
+    dims ``[256,64]`` and layouts ``{1,0}`` carry internal commas)."""
+    parts: List[str] = []
+    cur: List[str] = []
+    depth = 0
+    for ch in seg:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return parts
+
+
 def _dot_flops(rhs: str, comp: Computation) -> float:
     tys = re.findall(r"\w+\[[\d,]*\]", rhs[: rhs.find("dot(")])
     if not tys:
@@ -162,15 +182,21 @@ def _dot_flops(rhs: str, comp: Computation) -> float:
     if not seg or not km:
         return 0.0
     # newer HLO prints operand types inline — 'dot(f32[256,64]{1,0} %x, …)'
-    # — so the first shape token inside the parens IS the lhs type;
-    # older HLO prints bare operand names resolved via the symbol table
-    tm = _SHAPE.search(seg)
+    # — older HLO prints bare operand names resolved via the symbol
+    # table, and mixed-format output can do either per operand.  Split
+    # the operand list on TOP-LEVEL commas first (commas also appear
+    # inside shape/layout brackets), then look for an inline shape only
+    # within the lhs operand so an rhs inline type is never mistaken
+    # for the lhs shape.
+    operands = _split_top_level(seg)
+    lhs = operands[0] if operands else ""
+    tm = _SHAPE.search(lhs)
     if tm:
         lhs_dims = ([int(d) for d in tm.group(2).split(",")]
                     if tm.group(2) else [])
     else:
-        args = [a.strip().lstrip("%") for a in seg.split(",")]
-        _, lhs_dims = _dims(comp.types.get(args[0], "")) if args else ("", [])
+        name = lhs.strip().split()[-1].lstrip("%") if lhs.strip() else ""
+        _, lhs_dims = _dims(comp.types.get(name, ""))
     contracted = 1
     for ix in km.group(1).split(","):
         if ix != "" and int(ix) < len(lhs_dims):

@@ -16,6 +16,7 @@ from repro.core import cox
 from repro.core import flat as cox_flat
 from repro.core.backends import available_backends, get_backend
 from repro.core.backends.plan import LaunchPlan
+from repro.core.types import CoxUnsupported
 
 RUNNABLE = [sk for sk in all_kernels() if sk.kernel is not None]
 
@@ -77,6 +78,52 @@ def test_atomics_plus_stores_in_one_kernel():
         np.testing.assert_array_equal(got["total"], want["total"])
         np.testing.assert_array_equal(got["partial"], want["partial"])
     assert want["total"][0] == 900
+
+
+# ---------------------------------------------------------------------------
+# atomic old-value capture (ticket pattern) — serial-only semantics
+# ---------------------------------------------------------------------------
+
+
+@cox.kernel
+def _k_ticket(c, tickets: cox.Array(cox.i32), counter: cox.Array(cox.i32)):
+    if c.thread_idx() == 0:
+        t = c.atomic_add_old(counter, 0, 1)
+        tickets[c.block_idx()] = t
+
+
+def test_atomic_old_capture_is_serial_only():
+    """Captured atomic old values are unique only under serial
+    execution (on CUDA the ticket pattern is valid and deterministic):
+    the auto heuristic must route such kernels to scan, the delta-merge
+    backends must reject them outright, and scan must hand out exactly
+    the tickets 0..grid-1."""
+    assert cox_flat.captures_atomic_old(_k_ticket.ir)
+    assert cox_flat.choose_backend(_k_ticket.ir, grid=8) == "scan"
+    args = (np.full(8, -1, np.int32), np.zeros(1, np.int32))
+    out = _k_ticket.launch(grid=8, block=32, args=args)
+    assert sorted(np.asarray(out["tickets"]).tolist()) == list(range(8))
+    assert np.asarray(out["counter"])[0] == 8
+    for kw in ({"backend": "vmap"}, {"backend": "vmap", "chunk": 1}):
+        with pytest.raises(CoxUnsupported):
+            _k_ticket.launch(grid=8, block=32, args=args, **kw)
+
+
+def test_atomic_old_capture_rejected_on_mesh():
+    """A mesh forces the sharded backend, whose merge cannot reproduce
+    ticket semantics either — reject at build, never run silently."""
+    import jax
+    mesh = jax.make_mesh((1,), ("data",))
+    args = (np.full(8, -1, np.int32), np.zeros(1, np.int32))
+    with pytest.raises(CoxUnsupported):
+        _k_ticket.launch(grid=8, block=32, args=args, mesh=mesh)
+
+
+def test_plain_atomics_without_capture_still_take_vmap():
+    """The scan-only carve-out is ticket kernels, not all atomics."""
+    atomic_k = next(k for k in all_kernels() if k.name == "histogram64")
+    assert not cox_flat.captures_atomic_old(atomic_k.kernel.ir)
+    assert cox_flat.choose_backend(atomic_k.kernel.ir, grid=16) == "vmap"
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +197,19 @@ def test_launch_cache_hits_on_repeat_and_splits_on_geometry():
     _k_id.launch(grid=2, block=64, args=(np.zeros(128, np.float32), a),
                  backend="vmap")
     assert len(_k_id._launch_cache) == n1 + 1      # new backend: new entry
+
+
+def test_mesh_key_is_content_based():
+    """Two equivalent meshes must share a launch-cache key: id()-based
+    keys can be recycled after GC and alias stale executables."""
+    import jax
+    from repro.core.api import _mesh_key
+    m1 = jax.make_mesh((1,), ("data",))
+    m2 = jax.make_mesh((1,), ("data",))
+    k1, k2 = _mesh_key(m1), _mesh_key(m2)
+    assert k1 == k2
+    hash(k1)
+    assert _mesh_key(None) is None
 
 
 def test_scalar_args_do_not_retrace():

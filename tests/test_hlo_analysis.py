@@ -57,3 +57,34 @@ def test_scan_correction_is_large():
     corrected = analyze(c.as_text())["flops"]
     raw = xla_cost(c)["flops"]
     assert corrected > 1.5 * raw  # 4 scanned layers counted once in raw
+
+
+def test_dot_flops_mixed_format_operands():
+    """Mixed-format HLO: lhs printed as a bare name (symbol table), rhs
+    with an inline type — the rhs shape must not be taken as the lhs."""
+    hlo = """\
+HloModule m
+
+ENTRY %main (x: f32[8,16], y: f32[16,32]) -> f32[8,32] {
+  %x = f32[8,16]{1,0} parameter(0)
+  %y = f32[16,32]{1,0} parameter(1)
+  ROOT %d = f32[8,32]{1,0} dot(%x, f32[16,32]{1,0} %y), \
+lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    assert analyze(hlo)["flops"] == 2 * 8 * 32 * 16
+
+
+def test_dot_flops_inline_lhs_type():
+    """Both operands carrying inline types still resolves the lhs."""
+    hlo = """\
+HloModule m
+
+ENTRY %main (x: f32[8,16], y: f32[16,32]) -> f32[8,32] {
+  %x = f32[8,16]{1,0} parameter(0)
+  %y = f32[16,32]{1,0} parameter(1)
+  ROOT %d = f32[8,32]{1,0} dot(f32[8,16]{1,0} %x, f32[16,32]{1,0} %y), \
+lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    assert analyze(hlo)["flops"] == 2 * 8 * 32 * 16
