@@ -437,6 +437,69 @@ def _saxpy_args():
 _reg_extra("saxpyHeavy", "", saxpyHeavy, 64, 256, _saxpy_args)
 
 
+@cox.kernel
+def warpPrefixStats(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    # collective-dense warp statistics (butterfly all-reduce pipelines +
+    # segmented reductions) staged through shared memory: 8 warps of
+    # peel-free chained collectives, a block barrier, cross-warp shared
+    # reads — the flagship for warp-batched execution (the serial
+    # inter-warp loop pays one collective-op chain per warp; the batched
+    # (n_warps, W) plane pays one chain total)
+    tile = c.shared((8,), cox.f32)
+    tid = c.thread_idx()
+    i = c.block_idx() * c.block_dim() + tid
+    v = a[i]
+    x = v
+    s1 = c.shfl_xor(x, 1)
+    x = x + s1
+    s2 = c.shfl_xor(x, 2)
+    x = x + s2
+    s4 = c.shfl_xor(x, 4)
+    x = x + s4
+    s8 = c.shfl_xor(x, 8)
+    x = x + s8
+    s16 = c.shfl_xor(x, 16)
+    x = x + s16
+    y = v * v
+    t1 = c.shfl_xor(y, 1)
+    y = c.max(y, t1)
+    t2 = c.shfl_xor(y, 2)
+    y = c.max(y, t2)
+    t4 = c.shfl_xor(y, 4)
+    y = c.max(y, t4)
+    t8 = c.shfl_xor(y, 8)
+    y = c.max(y, t8)
+    t16 = c.shfl_xor(y, 16)
+    y = c.max(y, t16)
+    z = v + 1.0
+    u1 = c.shfl_down(z, 1)
+    z = z + u1
+    u2 = c.shfl_down(z, 2)
+    z = z + u2
+    u4 = c.shfl_down(z, 4)
+    z = z + u4
+    m = c.red_max(v)
+    n = c.red_min(v)
+    r = c.red_add(z)
+    b = c.red_add(y, width=8)
+    if c.lane_id() == 0:
+        tile[c.warp_id()] = x + m
+    c.syncthreads()
+    t = tile[tid % 8]
+    out[i] = x + y + z + m + n + r + b + t
+
+
+def _wps_args():
+    # small-integer values keep every float reduction exact in any
+    # association order, so all executor flavors agree bitwise
+    n = 32 * 256
+    a = RNG.integers(-6, 7, size=n).astype(np.float32)
+    return (np.zeros(n, np.float32), a)
+
+
+_reg_extra("warpPrefixStats", "warp-cg", warpPrefixStats, 32, 256, _wps_args)
+
+
 def all_kernels() -> List[SuiteKernel]:
     """Table-1 rows plus the extra (atomics / sweep) kernels."""
     return KERNELS + EXTRA_KERNELS

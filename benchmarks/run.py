@@ -1,18 +1,25 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` also
+writes every row (plus the structured backend-sweep matrix) to a
+machine-readable JSON file (default path ``BENCH_PR2.json``) so the
+perf trajectory is recorded across PRs.  ``--sections a,b`` runs a
+subset; ``--smoke`` is the CI regression guard (1 timing iteration,
+flagship kernels only).
 
   coverage      — Table 1: 31-kernel suite, flat vs hierarchical support
   flat_vs_hier  — Fig. 12: hierarchical overhead on warp-free kernels
   simd_vote     — Table 2: warp vote with vectorized vs scalar collectives
   jit_mode      — Fig. 13: JIT (unrolled) vs normal (fori) mode
-  backend_sweep — grid-execution backends: scan vs vmap (vs sharded when
-                  >1 device), equal outputs asserted + timing per axis
+  backend_sweep — grid-execution backends × warp execution: scan vs vmap
+                  (vs sharded when >1 device) × serial vs batched warps,
+                  equal outputs asserted + timing per cell
   scalability   — Fig. 14: blocks across host devices (subprocess, 8 dev)
   roofline      — §Roofline terms from results/dryrun_all.json (if present)
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import statistics
@@ -29,12 +36,19 @@ from repro.core import cox  # noqa: E402
 from repro.core.flat import FlatUnsupported, supports_flat  # noqa: E402
 from repro.core.types import CoxUnsupported  # noqa: E402
 
+# timing knobs (--smoke turns both down) and the JSON collectors
+WARMUP = 2
+ITERS = 10
+SMOKE = False
+RESULTS = []        # every CSV row, as dicts
+SWEEP_RESULTS = []  # structured backend_sweep matrix
 
-def _time_call(fn, *args, warmup=2, iters=10):
-    for _ in range(warmup):
+
+def _time_call(fn, *args, warmup=None, iters=None):
+    for _ in range(WARMUP if warmup is None else warmup):
         fn(*args)
     ts = []
-    for _ in range(iters):
+    for _ in range(ITERS if iters is None else iters):
         t0 = time.perf_counter()
         out = fn(*args)
         _block(out)
@@ -51,6 +65,7 @@ def _block(out):
 
 def _row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    RESULTS.append({"name": name, "us": round(us, 1), "derived": derived})
 
 
 # ---------------------------------------------------------------------------
@@ -193,43 +208,75 @@ def jit_mode():
 
 
 def backend_sweep():
-    """Grid-execution backend axis (scan | vmap | sharded): the same
-    kernels through every launch backend, equal outputs asserted, median
-    call time per backend.  The vmap column is the block-parallel payoff
-    (paper §4's pthread-per-block, recast as a chunked jax.vmap)."""
+    """Grid-execution backend × warp-execution axis: the same kernels
+    through every (backend, warp_exec) cell, equal outputs asserted,
+    median call time per cell.  The vmap column is the block-parallel
+    payoff (paper §4's pthread-per-block, recast as a chunked jax.vmap);
+    the batched-warp column is the same trick one level down — the
+    inter-warp loop vectorized into one (n_warps, W) lane plane."""
     import jax
     from benchmarks.kernels_suite import all_kernels
 
     backends = ["scan", "vmap"]
     mesh = None
-    if len(jax.devices()) > 1:
+    if not SMOKE and len(jax.devices()) > 1:
         mesh = jax.make_mesh((len(jax.devices()),), ("data",))
         backends.append("sharded")
 
-    picks = ("vectorAdd", "MatrixMulCUDA", "reduce4", "histogram64",
-             "saxpyHeavy")
+    picks = ("MatrixMulCUDA", "warpPrefixStats", "blockCounter") if SMOKE \
+        else ("vectorAdd", "MatrixMulCUDA", "reduce0", "reduce4",
+              "histogram64", "blockCounter", "saxpyHeavy",
+              "warpPrefixStats")
     for sk in all_kernels():
         if sk.name not in picks:
             continue
         args = sk.make_args()
+        n_warps = -(-sk.block // 32)
 
-        def run(backend):
+        def run(backend, warp_exec="serial", simd=True):
             kw = {"mesh": mesh} if backend == "sharded" else {}
             return sk.kernel.launch(grid=sk.grid, block=sk.block, args=args,
-                                    backend=backend, **kw)
+                                    backend=backend, warp_exec=warp_exec,
+                                    simd=simd, **kw)
 
         base = run("scan")
         times = {}
-        for b in backends:
-            out = run(b)
+        cells = [(b, we, True) for b in backends
+                 for we in ("serial", "batched")]
+        if sk.kernel.uses_warp_features():
+            # Table-2's w/o-AVX baseline × warp execution: the scalar
+            # collectives' per-lane loops are non-fusable op chains, so
+            # the batched plane divides their instance count by n_warps
+            cells += [("scan", we, False) for we in ("serial", "batched")]
+        for b, we, simd in cells:
+            out = run(b, we, simd)
             for k in base:
                 np.testing.assert_array_equal(
                     np.asarray(out[k]), np.asarray(base[k]),
-                    err_msg=f"{sk.name}.{k}: backend={b} != scan")
-            times[b] = _time_call(lambda b=b: run(b))
-        derived = ";".join(f"{b}_us={times[b]:.1f}" for b in backends)
-        derived += f";vmap_speedup={times['scan'] / times['vmap']:.2f}x"
-        _row(f"backend_sweep.{sk.name}", times["vmap"], derived)
+                    err_msg=f"{sk.name}.{k}: {b}/{we}/simd={simd} "
+                            f"!= scan/serial")
+            cell = f"{b}_{we}" + ("" if simd else "_noavx")
+            times[cell] = _time_call(
+                lambda b=b, we=we, simd=simd: run(b, we, simd))
+        derived = ";".join(f"{c}_us={t:.1f}" for c, t in times.items())
+        wb = times["scan_serial"] / times["scan_batched"]
+        derived += f";vmap_speedup={times['scan_serial'] / times['vmap_serial']:.2f}x"
+        derived += f";warp_batch_speedup={wb:.2f}x"
+        entry = {
+            "kernel": sk.name, "grid": sk.grid, "block": sk.block,
+            "n_warps": n_warps, "features": sk.features or "none",
+            "times_us": {c: round(t, 1) for c, t in times.items()},
+            "warp_batch_speedup_scan": round(wb, 2),
+            "warp_batch_speedup_vmap": round(
+                times["vmap_serial"] / times["vmap_batched"], 2),
+        }
+        if "scan_serial_noavx" in times:
+            entry["warp_batch_speedup_scan_noavx"] = round(
+                times["scan_serial_noavx"] / times["scan_batched_noavx"], 2)
+            derived += (f";warp_batch_noavx_speedup="
+                        f"{entry['warp_batch_speedup_scan_noavx']:.2f}x")
+        _row(f"backend_sweep.{sk.name}", times["vmap_batched"], derived)
+        SWEEP_RESULTS.append(entry)
 
 
 # ---------------------------------------------------------------------------
@@ -244,7 +291,16 @@ def scalability():
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     r = subprocess.run([sys.executable, worker], capture_output=True,
                        text=True, env=env, timeout=1200)
-    sys.stdout.write(r.stdout)
+    for line in r.stdout.splitlines():
+        # re-emit through _row so the worker's rows reach --json too
+        parts = line.split(",", 2)
+        if len(parts) == 3:
+            try:
+                _row(parts[0], float(parts[1]), parts[2])
+                continue
+            except ValueError:
+                pass
+        print(line, flush=True)
     if r.returncode != 0:
         _row("scalability.FAILED", 0.0, r.stderr[-200:].replace("\n", ";"))
 
@@ -265,14 +321,53 @@ def roofline():
     _row("roofline.SKIPPED", 0.0, "run repro.launch.dryrun --all first")
 
 
-def main() -> None:
-    coverage()
-    flat_vs_hier()
-    simd_vote()
-    jit_mode()
-    backend_sweep()
-    scalability()
-    roofline()
+SECTIONS = {
+    "coverage": coverage,
+    "flat_vs_hier": flat_vs_hier,
+    "simd_vote": simd_vote,
+    "jit_mode": jit_mode,
+    "backend_sweep": backend_sweep,
+    "scalability": scalability,
+    "roofline": roofline,
+}
+
+
+def main(argv=None) -> None:
+    global WARMUP, ITERS, SMOKE
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--json", nargs="?", const="BENCH_PR2.json", default=None,
+                   metavar="PATH",
+                   help="write machine-readable results (default path "
+                        "BENCH_PR2.json when the flag is given bare)")
+    p.add_argument("--sections", default=None,
+                   help=f"comma-separated subset of {sorted(SECTIONS)}")
+    p.add_argument("--smoke", action="store_true",
+                   help="CI smoke: 1 timing iteration, flagship kernels "
+                        "only (pair with --sections backend_sweep)")
+    args = p.parse_args(argv)
+    if args.smoke:
+        WARMUP, ITERS, SMOKE = 1, 1, True
+    names = (list(SECTIONS) if args.sections is None
+             else [s.strip() for s in args.sections.split(",") if s.strip()])
+    for name in names:
+        if name not in SECTIONS:
+            p.error(f"unknown section {name!r}; available: {sorted(SECTIONS)}")
+    for name in names:
+        SECTIONS[name]()
+    if args.json:
+        payload = {
+            "schema": "cox-bench-v1",
+            "smoke": SMOKE,
+            "iters": ITERS,
+            "sections": names,
+            "rows": RESULTS,
+            "backend_sweep": SWEEP_RESULTS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json} ({len(RESULTS)} rows, "
+              f"{len(SWEEP_RESULTS)} sweep entries)", flush=True)
 
 
 if __name__ == "__main__":

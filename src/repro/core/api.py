@@ -67,25 +67,35 @@ class KernelFn:
         return self._cache[key]
 
     def launch(self, *, grid: int, block: int, args: Sequence[Any],
-               collapse: str = "hybrid", mode: str = "normal",
+               collapse: str = "hybrid", mode: str = "auto",
                simd: bool = True, warp_size: int = WARP_SIZE,
                mesh=None, axis: str = "data", backend: str = "auto",
-               chunk: Optional[int] = None) -> Dict[str, Any]:
+               chunk: Optional[int] = None,
+               warp_exec: str = "auto") -> Dict[str, Any]:
         """Launch with backend dispatch (see ``repro.core.backends``):
         backend='auto'|'scan'|'vmap'|'sharded'; ``chunk`` bounds how many
-        blocks the vmap-based backends run simultaneously."""
+        blocks the vmap-based backends run simultaneously;
+        ``warp_exec='auto'|'serial'|'batched'`` picks between the serial
+        inter-warp loop and the batched (n_warps, W) lane plane;
+        ``mode='auto'|'normal'|'jit'`` picks loop-carried vs unrolled
+        inter-warp iteration (all three resolved by ``repro.core.flat``
+        heuristics when 'auto')."""
         ck = self.compiled(collapse=collapse, warp_size=warp_size, block=block)
         bname = _flat.choose_backend(self.ir, grid=grid, mesh=mesh,
                                      requested=backend)
         n_warps = -(-block // ck.warp_size)
         mode = _flat.choose_mode(self.ir, n_warps=n_warps, requested=mode)
+        wexec = _flat.choose_warp_exec(self.ir, n_warps=n_warps,
+                                       requested=warp_exec,
+                                       machine=ck.machine)
         key = (id(ck), bname, mode, grid, block, n_warps, simd, chunk,
-               _mesh_key(mesh), axis)
+               wexec, _mesh_key(mesh), axis)
         cached = self._launch_cache.get(key)
         if cached is None:
             plan, exe = _build_launcher(
                 ck, grid=grid, block=block, mode=mode, simd=simd,
-                mesh=mesh, axis=axis, backend=bname, chunk=chunk)
+                mesh=mesh, axis=axis, backend=bname, chunk=chunk,
+                warp_exec=wexec)
             cached = self._launch_cache[key] = (plan, exe)
         plan, exe = cached
         globals_, shapes, scalars = plan.bind_args(args)

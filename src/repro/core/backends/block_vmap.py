@@ -71,7 +71,8 @@ def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
     """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher."""
     plan.check_mergeable(name)
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
-                             simd=plan.simd, track_writes=True)
+                             simd=plan.simd, track_writes=True,
+                             warp_exec=plan.warp_exec)
     bid_chunks = plan.chunked_bids()
 
     def run(globals_, scalars):

@@ -33,23 +33,52 @@ class LaunchPlan:
     chunk: int           # blocks per vmap slice (1 = fully serial merge)
     has_atomics: bool
     captures_atomic_old: bool  # AtomicRMW with dst — serial-only
+    warp_exec: str = "serial"  # 'serial' | 'batched' (resolved, never 'auto')
 
     @classmethod
     def build(cls, ck: CompiledKernel, *, grid: int, block: int,
               mode: str = "normal", simd: bool = True,
-              chunk: Optional[int] = None) -> "LaunchPlan":
+              chunk: Optional[int] = None,
+              warp_exec: str = "serial") -> "LaunchPlan":
         if block <= 0 or grid <= 0:
             raise ValueError("grid and block must be positive")
         if block > 1024:
             raise CoxUnsupported("CUDA blocks are limited to 1024 threads")
+        if mode not in ("normal", "jit"):
+            raise ValueError(f"mode must be resolved to 'normal' or 'jit' "
+                             f"before plan build, got {mode!r} "
+                             f"(flat.choose_mode resolves 'auto')")
+        if warp_exec not in ("serial", "batched"):
+            raise ValueError(f"warp_exec must be resolved to 'serial' or "
+                             f"'batched' before plan build, got "
+                             f"{warp_exec!r} (flat.choose_warp_exec "
+                             f"resolves 'auto')")
         n_warps = -(-block // ck.warp_size)
         if chunk is None:
             chunk = min(grid, DEFAULT_CHUNK)
         chunk = max(1, min(int(chunk), grid))
         atomics = [s for s in walk_instrs(ck) if isinstance(s, K.AtomicRMW)]
-        return cls(ck, grid, block, n_warps, mode, simd, chunk,
+        plan = cls(ck, grid, block, n_warps, mode, simd, chunk,
                    has_atomics=bool(atomics),
-                   captures_atomic_old=any(s.dst for s in atomics))
+                   captures_atomic_old=any(s.dst for s in atomics),
+                   warp_exec=warp_exec)
+        plan.check_warp_batchable()
+        return plan
+
+    def check_warp_batchable(self):
+        """Reject launches whose semantics the per-warp copy merge of
+        warp-batched execution cannot reproduce — the same ticket-
+        pattern argument as :meth:`check_mergeable`, one level down:
+        captured atomic old values are unique only under a serial warp
+        order, and per-warp delta buffers would hand every warp of a
+        block the same ticket."""
+        if self.warp_exec == "batched" and self.captures_atomic_old:
+            raise CoxUnsupported(
+                f"kernel '{self.ck.kernel.name}' captures atomic old "
+                f"values (atomic_add_old): old values are only unique "
+                f"under a serial warp order, which warp-batched "
+                f"execution's per-warp delta merge cannot reproduce — "
+                f"use warp_exec='serial' (the 'auto' heuristic picks it)")
 
     def check_mergeable(self, backend: str):
         """Reject launches whose semantics the write-mask / atomic-delta

@@ -21,7 +21,7 @@ name = "scan"
 def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
     """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher."""
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
-                             simd=plan.simd)
+                             simd=plan.simd, warp_exec=plan.warp_exec)
 
     def run(globals_, scalars):
         def step(g, bid):

@@ -2,21 +2,34 @@
 
 Two backends, mirroring the paper's Table 2 (warp vote w/ and w/o AVX):
 
-* **vectorized** — lane-axis vector ops on the (W,) warp buffer.  On x86
+* **vectorized** — lane-axis vector ops on the warp buffer.  On x86
   the paper uses AVX; on TPU these lower to VPU lane shifts/reductions;
   on the CPU validation platform XLA vectorizes them.
 * **scalar** — per-lane `lax.fori_loop` emulation (the paper's "w/o AVX"
   baseline: one instruction + branch per lane).
 
-All collectives honour a static tile ``width`` (cooperative-group
-``thread_block_tile<N>``) — width == 0 or W means the full warp.  The
-``mask`` argument carries the active-lane mask (threads past block_size
-in a partial last warp); inactive lanes contribute the operation's
-identity, matching CUDA's behaviour where such lanes simply do not
-exist.
+Every collective operates on the **last** axis of the buffer and accepts
+arbitrary leading batch axes, so a whole block's collectives can be
+evaluated as one ``(n_warps, W)`` lane plane in a single direct call.
+(The warp-batched executor itself reaches these functions through
+``jax.vmap`` — its buffers are ``(W,)`` batched tracers at trace time,
+not explicit 2-D planes — so the explicit leading-axis support exists
+for direct/library callers and is what the parity suite in
+``tests/test_collectives_property.py`` pins against the per-warp
+semantics.)  Tile segmentation (cooperative-group
+``thread_block_tile<N>``; the static ``width`` argument) stays per-warp:
+segments never cross the lane axis, so the leading axes are untouched.
+Width == 0 or W means the full warp.
+
+The ``mask`` argument carries the active-lane mask (threads past
+block_size in a partial last warp); it broadcasts against the buffer, so
+a shared ``(W,)`` mask serves every warp of a batched plane.  Inactive
+lanes contribute the operation's identity, matching CUDA's behaviour
+where such lanes simply do not exist.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -34,7 +47,30 @@ def _tile(width: int, W: int) -> int:
 
 
 def _seg(buf: jnp.ndarray, w: int):
-    return buf.reshape((-1, w))
+    """Split the lane axis into (n_segments, w) tiles, keeping any
+    leading (warp-plane) axes intact."""
+    return buf.reshape(buf.shape[:-1] + (-1, w))
+
+
+def _unseg(seg: jnp.ndarray, w: int):
+    """Broadcast one value per segment back over its w lanes
+    (broadcast + reshape — never a gather)."""
+    out_shape = seg.shape[:-1] + (seg.shape[-1] * w,)
+    return jnp.broadcast_to(seg[..., None],
+                            seg.shape + (w,)).reshape(out_shape)
+
+
+def _gather(buf: jnp.ndarray, src: jnp.ndarray):
+    """Per-lane gather along the lane axis.  ``src`` is (W,) or any
+    shape broadcastable to ``buf`` (per-warp source lanes under a
+    leading warp axis).  The 1-D case keeps the cheap shared-index
+    ``take`` form — one index vector for every leading row — instead of
+    materializing a fully-batched gather."""
+    src = jnp.asarray(src).astype(jnp.int32)
+    if src.ndim <= 1:
+        return jnp.take(buf, src, axis=-1)
+    return jnp.take_along_axis(buf, jnp.broadcast_to(src, buf.shape),
+                               axis=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -47,7 +83,7 @@ def shfl_down(buf, off, W: int, width: int = 0, mask=None):
     lane = jnp.arange(W, dtype=jnp.int32)
     sub = lane % w
     src = jnp.clip(lane + off, 0, W - 1)
-    shifted = buf[src]
+    shifted = _gather(buf, src)
     # CUDA: lanes whose source falls outside the tile keep their own value
     return jnp.where(sub + off < w, shifted, buf)
 
@@ -57,7 +93,7 @@ def shfl_up(buf, off, W: int, width: int = 0, mask=None):
     lane = jnp.arange(W, dtype=jnp.int32)
     sub = lane % w
     src = jnp.clip(lane - off, 0, W - 1)
-    shifted = buf[src]
+    shifted = _gather(buf, src)
     return jnp.where(sub - off >= 0, shifted, buf)
 
 
@@ -67,7 +103,7 @@ def shfl_xor(buf, lanemask, W: int, width: int = 0, mask=None):
     src = lane ^ lanemask
     ok = (src % w) == ((lane % w) ^ lanemask)  # stays inside the tile
     src = jnp.clip(src, 0, W - 1)
-    return jnp.where(ok, buf[src], buf)
+    return jnp.where(ok, _gather(buf, src), buf)
 
 
 def shfl_idx(buf, srclane, W: int, width: int = 0, mask=None):
@@ -75,7 +111,7 @@ def shfl_idx(buf, srclane, W: int, width: int = 0, mask=None):
     lane = jnp.arange(W, dtype=jnp.int32)
     base = (lane // w) * w
     src = base + (srclane % w).astype(jnp.int32)
-    return buf[jnp.clip(src, 0, W - 1)]
+    return _gather(buf, jnp.clip(src, 0, W - 1))
 
 
 def vote_all(buf, W: int, width: int = 0, mask=None):
@@ -83,8 +119,8 @@ def vote_all(buf, W: int, width: int = 0, mask=None):
     b = buf.astype(jnp.bool_)
     if mask is not None:
         b = b | ~mask  # inactive lanes vote True (identity of AND)
-    seg = _seg(b, w).all(axis=1)
-    return jnp.repeat(seg, w)
+    seg = _seg(b, w).all(axis=-1)
+    return _unseg(seg, w)
 
 
 def vote_any(buf, W: int, width: int = 0, mask=None):
@@ -92,8 +128,8 @@ def vote_any(buf, W: int, width: int = 0, mask=None):
     b = buf.astype(jnp.bool_)
     if mask is not None:
         b = b & mask
-    seg = _seg(b, w).any(axis=1)
-    return jnp.repeat(seg, w)
+    seg = _seg(b, w).any(axis=-1)
+    return _unseg(seg, w)
 
 
 def ballot(buf, W: int, width: int = 0, mask=None):
@@ -102,8 +138,9 @@ def ballot(buf, W: int, width: int = 0, mask=None):
     if mask is not None:
         b = b & mask
     weights = (jnp.uint32(1) << jnp.arange(w, dtype=jnp.uint32))
-    seg = (_seg(b, w).astype(jnp.uint32) * weights).sum(axis=1, dtype=jnp.uint32)
-    return jnp.repeat(seg, w)
+    seg = (_seg(b, w).astype(jnp.uint32) * weights).sum(
+        axis=-1, dtype=jnp.uint32)
+    return _unseg(seg, w)
 
 
 def red_add(buf, W: int, width: int = 0, mask=None):
@@ -111,8 +148,8 @@ def red_add(buf, W: int, width: int = 0, mask=None):
     b = buf
     if mask is not None:
         b = jnp.where(mask, b, jnp.zeros_like(b))
-    seg = _seg(b, w).sum(axis=1)
-    return jnp.repeat(seg, w)
+    seg = _seg(b, w).sum(axis=-1)
+    return _unseg(seg, w)
 
 
 def red_max(buf, W: int, width: int = 0, mask=None):
@@ -122,8 +159,8 @@ def red_max(buf, W: int, width: int = 0, mask=None):
         lo = jnp.finfo(b.dtype).min if jnp.issubdtype(b.dtype, jnp.floating) \
             else jnp.iinfo(b.dtype).min
         b = jnp.where(mask, b, jnp.full_like(b, lo))
-    seg = _seg(b, w).max(axis=1)
-    return jnp.repeat(seg, w)
+    seg = _seg(b, w).max(axis=-1)
+    return _unseg(seg, w)
 
 
 def red_min(buf, W: int, width: int = 0, mask=None):
@@ -133,8 +170,8 @@ def red_min(buf, W: int, width: int = 0, mask=None):
         hi = jnp.finfo(b.dtype).max if jnp.issubdtype(b.dtype, jnp.floating) \
             else jnp.iinfo(b.dtype).max
         b = jnp.where(mask, b, jnp.full_like(b, hi))
-    seg = _seg(b, w).min(axis=1)
-    return jnp.repeat(seg, w)
+    seg = _seg(b, w).min(axis=-1)
+    return _unseg(seg, w)
 
 
 VECTORIZED = {
@@ -148,6 +185,48 @@ VECTORIZED = {
 # ---------------------------------------------------------------------------
 # scalar backend (per-lane loops — the paper's "w/o AVX" rows in Table 2)
 # ---------------------------------------------------------------------------
+
+
+def _lift_lane_axis(fn):
+    """Give a 1-D (W,)-only scalar collective the same leading-axis
+    contract as the vectorized backend: leading axes are flattened and
+    ``jax.vmap``-ed over (the per-lane loop bodies stay scalar, so the
+    Table-2 instruction-count story per warp is unchanged).  Extra
+    operands that carry the same leading axes (per-warp offset vectors)
+    are mapped along with the buffer; scalars and plain (W,) operands
+    are shared across warps."""
+    @functools.wraps(fn)
+    def lifted(buf, *extra, W, width=0, mask=None):
+        buf = jnp.asarray(buf)  # fori bodies index with traced lane ids
+        if mask is not None:
+            mask = jnp.asarray(mask)
+        if buf.ndim <= 1:
+            return fn(buf, *extra, W=W, width=width, mask=mask)
+        lead = buf.shape[:-1]
+        n_lead = len(lead)
+        ops = [buf.reshape((-1, buf.shape[-1]))]
+        axes = [0]
+        for e in extra:
+            ea = jnp.asarray(e)
+            if ea.ndim > 1 and ea.shape[:n_lead] == lead:
+                ops.append(ea.reshape((-1,) + ea.shape[n_lead:]))
+                axes.append(0)
+            else:
+                ops.append(ea)
+                axes.append(None)
+        if mask is not None:
+            ops.append(jnp.broadcast_to(mask, buf.shape)
+                       .reshape(ops[0].shape))
+            axes.append(0)
+
+            def call(b, *rest):
+                return fn(b, *rest[:-1], W=W, width=width, mask=rest[-1])
+        else:
+            def call(b, *rest):
+                return fn(b, *rest, W=W, width=width, mask=None)
+        out = jax.vmap(call, in_axes=tuple(axes))(*ops)
+        return out.reshape(lead + out.shape[1:])
+    return lifted
 
 
 def _scalar_vote(buf, W, width, mask, op, identity):
@@ -170,14 +249,17 @@ def _scalar_vote(buf, W, width, mask, op, identity):
     return lax.fori_loop(0, n_seg, seg_step, jnp.zeros((W,), jnp.bool_))
 
 
+@_lift_lane_axis
 def scalar_vote_all(buf, W, width=0, mask=None):
     return _scalar_vote(buf, W, width, mask, "all", True)
 
 
+@_lift_lane_axis
 def scalar_vote_any(buf, W, width=0, mask=None):
     return _scalar_vote(buf, W, width, mask, "any", False)
 
 
+@_lift_lane_axis
 def scalar_red_add(buf, W, width=0, mask=None):
     w = _tile(width, W)
     n_seg = W // w
@@ -192,12 +274,15 @@ def scalar_red_add(buf, W, width=0, mask=None):
     return lax.fori_loop(0, n_seg, seg_step, jnp.zeros((W,), b.dtype))
 
 
+@_lift_lane_axis
 def scalar_shfl_down(buf, off, W, width=0, mask=None):
     w = _tile(width, W)
+    off = jnp.asarray(off)
 
     def lane_step(i, out):
         sub = i % w
-        src = jnp.where(sub + off < w, i + off, i)
+        o = off[i] if off.ndim else off  # per-lane or uniform offset
+        src = jnp.where(sub + o < w, i + o, i)
         return out.at[i].set(buf[src])
 
     return lax.fori_loop(0, W, lane_step, jnp.zeros_like(buf))

@@ -22,6 +22,26 @@ Modes:
                grid; block size still static per JAX shape rules (the
                runtime-configuration analogue).
 
+Warp execution (``warp_exec``, orthogonal to the mode):
+* ``serial``  — the inter-warp loop above: one warp at a time threads
+                through each block-level PR (the paper's Code 3 shape);
+* ``batched`` — COX's guarantee that warps are independent *between
+                barriers* is exposed to XLA: all ``n_warps`` warps of a
+                block-level PR run simultaneously as one ``(n_warps, W)``
+                lane plane (``jax.vmap`` over the warp axis of the
+                warp-level machine walk).  Each warp runs on its own copy
+                of shared memory and global memory with write-mask /
+                atomic-delta tracking; the copies are reconciled at every
+                block-level PR boundary (== every block barrier) by the
+                same bit-exact single-writer select merge the grid backends
+                use (``backends/merge.py``) — bitwise-identical to serial
+                execution for race-free kernels.  Block-replicated vars
+                are handed to each warp as its own (W,) row; the stacked
+                rows are the merged plane.  Warp-peel branch directions become
+                per-warp (each warp's lane 0 decides; divergent warps
+                advance their PC machines independently under vmap's
+                masked while/switch batching).
+
 ``simd=False`` switches warp collectives to per-lane loop emulation
 (Table 2's "w/o AVX" baseline).
 """
@@ -43,7 +63,7 @@ from .lower import lower_kernel
 from .passes import (insert_extra_barriers, lower_warp_intrinsics,
                      split_blocks_at_barriers)
 from .regions import (EXIT, BlockPR, BlockPeel, Machine, WarpPR, WarpPeel,
-                      build_machine, replication_classes)
+                      build_machine, replication_classes, warp_peel_count)
 from .typeinfer import infer
 from .types import (ArraySpec, BarrierLevel, CoxUnsupported, DType,
                     ScalarSpec, SharedSpec)
@@ -85,8 +105,10 @@ class CompiledKernel:
         n_wpr = sum(
             sum(isinstance(w, WarpPR) for w in n.warp.nodes)
             for n in self.machine.nodes if isinstance(n, BlockPR))
+        n_peel = warp_peel_count(self.machine)
         return (f"kernel {self.kernel.name}: {len(self.cfg.blocks)} blocks, "
                 f"{n_bpr} block-level PRs, {n_wpr} warp-level PRs, "
+                f"{n_peel} warp peels, "
                 f"{len([v for v, c in self.classes.items() if c == 'block'])} "
                 f"block-replicated vars")
 
@@ -127,7 +149,10 @@ class _Env:
                  globals_: Dict[str, Any], simd: bool,
                  track_writes: bool = False,
                  store_masks: Optional[Dict[str, Any]] = None,
-                 atomic_deltas: Optional[Dict[str, Any]] = None):
+                 atomic_deltas: Optional[Dict[str, Any]] = None,
+                 shared_masks: Optional[Dict[str, Any]] = None,
+                 block_rows: bool = False,
+                 log_arrays: Optional[Set[str]] = None):
         self.ck = ck
         self.W = ck.warp_size
         self.wid = wid
@@ -148,6 +173,25 @@ class _Env:
         self.track_writes = track_writes
         self.store_masks = store_masks if store_masks is not None else {}
         self.atomic_deltas = atomic_deltas if atomic_deltas is not None else {}
+        # shared-memory write masks: tracked only under warp-batched
+        # execution, where each warp runs on its own copy of shared
+        # memory and the copies merge at block-level PR boundaries
+        self.track_shared = shared_masks is not None
+        self.shared_masks = shared_masks if shared_masks is not None else {}
+        # batched warp plane: block-replicated vars are handed to each
+        # warp as its own (W,) row (a warp never touches another warp's
+        # row, so the full (n_warps, W) plane would only buy every
+        # write a batched scatter); serial mode keeps the plane and
+        # indexes it with wid
+        self.block_rows = block_rows
+        # store log (batched warp plane): stores to arrays this PR never
+        # reads skip the copy/mask machinery entirely — each executed
+        # StoreGlobal appends its (safe idx, value) lane vectors here and
+        # the plane runner replays them onto the carried array with one
+        # flat scatter per store instruction, O(n_warps × W) instead of
+        # O(n_warps × |array|)
+        self.log_arrays = log_arrays if log_arrays is not None else set()
+        self.store_log: List[Tuple[str, Any, Any]] = []
         self.lane = jnp.arange(self.W, dtype=jnp.int32)
 
     @property
@@ -160,7 +204,8 @@ class _Env:
     def state(self) -> Dict[str, Any]:
         return {"wv": dict(self.warp_vars), "bv": dict(self.block_vars),
                 "sh": dict(self.shmem), "g": dict(self.globals),
-                "sm": dict(self.store_masks), "ad": dict(self.atomic_deltas)}
+                "sm": dict(self.store_masks), "ad": dict(self.atomic_deltas),
+                "shm": dict(self.shared_masks)}
 
     def load(self, st: Dict[str, Any]):
         self.warp_vars = dict(st["wv"])
@@ -169,6 +214,7 @@ class _Env:
         self.globals = dict(st["g"])
         self.store_masks = dict(st["sm"])
         self.atomic_deltas = dict(st["ad"])
+        self.shared_masks = dict(st["shm"])
 
     # ---------------- variables ----------------
 
@@ -181,6 +227,8 @@ class _Env:
         cls = self.ck.classes.get(name, "warp")
         if cls == "warp":
             return self.warp_vars[name]
+        if self.block_rows:
+            return self.block_vars[name]
         return self.block_vars[name][self.wid]
 
     def write_var(self, name: str, value, mask=None):
@@ -191,6 +239,8 @@ class _Env:
         cls = self.ck.classes.get(name, "warp")
         if cls == "warp":
             self.warp_vars[name] = value
+        elif self.block_rows:
+            self.block_vars[name] = value
         else:
             self.block_vars[name] = self.block_vars[name].at[self.wid].set(value)
 
@@ -315,6 +365,9 @@ def exec_instr(ins, env: _Env, mask, *, jit_mode: bool):
         idx = _safe_idx(eval_expr(ins.index, env), m, arr.shape[0])
         val = jnp.broadcast_to(
             jnp.asarray(eval_expr(ins.value, env)).astype(arr.dtype), m.shape)
+        if ins.array in env.log_arrays:
+            env.store_log.append((ins.array, idx, val))
+            return
         env.globals[ins.array] = arr.at[idx].set(val, mode="drop")
         if env.track_writes:
             sm = env.store_masks[ins.array]
@@ -326,6 +379,9 @@ def exec_instr(ins, env: _Env, mask, *, jit_mode: bool):
         val = jnp.broadcast_to(
             jnp.asarray(eval_expr(ins.value, env)).astype(arr.dtype), m.shape)
         env.shmem[ins.array] = arr.at[idx].set(val, mode="drop")
+        if env.track_shared:
+            shm = env.shared_masks[ins.array]
+            env.shared_masks[ins.array] = shm.at[idx].set(True, mode="drop")
     elif isinstance(ins, K.AtomicRMW):
         m = _store_mask(env, mask)
         if env.track_writes:
@@ -393,12 +449,17 @@ def exec_instr(ins, env: _Env, mask, *, jit_mode: bool):
         raise CoxUnsupported(f"cannot execute {ins!r}")
 
 
-def _written_names(instrs) -> Tuple[Set[str], Set[str], Set[str]]:
-    """(variables, global arrays, shared arrays) a statement list may
-    write, descending into If/While — the minimal lax carry for a loop."""
+def _written_names(instrs) -> Tuple[Set[str], Set[str], Set[str], Set[str]]:
+    """(variables, global arrays, shared arrays, atomic targets) a
+    statement list may write, descending into If/While — the minimal lax
+    carry for a loop, and the minimal per-warp copy/merge set for the
+    batched warp plane.  Atomic targets are also members of the global
+    set; they are reported separately because they merge by delta sum,
+    not writer selection."""
     wv: Set[str] = set()
     arrays: Set[str] = set()
     sh: Set[str] = set()
+    atomics: Set[str] = set()
     stack = list(instrs)
     while stack:
         s = stack.pop()
@@ -410,6 +471,7 @@ def _written_names(instrs) -> Tuple[Set[str], Set[str], Set[str]]:
             sh.add(s.array)
         elif isinstance(s, K.AtomicRMW):
             arrays.add(s.array)
+            atomics.add(s.array)
             if s.dst:
                 wv.add(s.dst)
         elif isinstance(s, WarpBufStore):
@@ -421,7 +483,108 @@ def _written_names(instrs) -> Tuple[Set[str], Set[str], Set[str]]:
             stack.extend(s.else_body)
         elif isinstance(s, K.While):
             stack.extend(s.body)
-    return wv, arrays, sh
+    return wv, arrays, sh, atomics
+
+
+def _instr_exprs(s):
+    """Every expression an instruction evaluates (not descending into
+    nested statements)."""
+    if isinstance(s, K.Assign):
+        return [s.value]
+    if isinstance(s, (K.StoreGlobal, K.StoreShared)):
+        return [s.index, s.value]
+    if isinstance(s, K.AtomicRMW):
+        return [s.index, s.value]
+    if isinstance(s, WarpBufStore):
+        return [s.value]
+    if isinstance(s, WarpBufCompute):
+        return list(s.args)
+    if isinstance(s, K.If):
+        return [s.cond]
+    if isinstance(s, K.While):
+        return [s.cond]
+    return []
+
+
+def _loaded_globals(instrs) -> Set[str]:
+    """Global arrays any expression in ``instrs`` may read."""
+    out: Set[str] = set()
+    stack = list(instrs)
+    estack: List[K.Expr] = []
+    while stack:
+        s = stack.pop()
+        estack.extend(_instr_exprs(s))
+        if isinstance(s, K.If):
+            stack.extend(s.then_body)
+            stack.extend(s.else_body)
+        elif isinstance(s, K.While):
+            stack.extend(s.body)
+    while estack:
+        e = estack.pop()
+        if isinstance(e, K.LoadGlobal):
+            out.add(e.array)
+        estack.extend(K.expr_children(e))
+    return out
+
+
+def _stored_in_while(instrs, in_while: bool = False) -> Set[str]:
+    """Global arrays stored from inside a While body — their stores
+    execute inside a lax.while trace, so they cannot use the store log
+    (log entries must escape to the post-vmap replay)."""
+    out: Set[str] = set()
+    for s in instrs:
+        if isinstance(s, K.StoreGlobal) and in_while:
+            out.add(s.array)
+        elif isinstance(s, K.If):
+            out |= _stored_in_while(s.then_body, in_while)
+            out |= _stored_in_while(s.else_body, in_while)
+        elif isinstance(s, K.While):
+            out |= _stored_in_while(s.body, True)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class _PRPlan:
+    """Static per-block-level-PR execution plan for the batched warp
+    plane: what to copy/mask/merge, and which stores can go through the
+    replay log instead."""
+    block_vars: Tuple[str, ...]   # block-replicated vars written
+    shared: Tuple[str, ...]       # shared arrays written (mask+merge)
+    masked: Tuple[str, ...]       # globals on the copy/mask/merge path
+    atomics: Tuple[str, ...]      # atomic targets (delta merge)
+    logged: Tuple[str, ...]       # globals on the store-log path
+
+
+def _pr_plan(ck: CompiledKernel, node: BlockPR) -> _PRPlan:
+    """Write sets + store-log eligibility of one block-level PR.
+
+    An array's stores go through the log when the warp graph is linear
+    (log entries inside ``lax.switch`` branches cannot escape), every
+    store to it sits outside While bodies, the PR never *loads* it (a
+    logged store skips the per-warp copy, so a same-lane reload would
+    read stale data), and it is not an atomic target in this PR."""
+    wv: Set[str] = set()
+    g: Set[str] = set()
+    sh: Set[str] = set()
+    at: Set[str] = set()
+    loads: Set[str] = set()
+    in_while: Set[str] = set()
+    for bname in node.blocks:
+        instrs = ck.cfg.blocks[bname].instrs
+        w, a, s, t = _written_names(instrs)
+        wv |= w
+        g |= a
+        sh |= s
+        at |= t
+        loads |= _loaded_globals(instrs)
+        in_while |= _stored_in_while(instrs)
+    bvw = {v for v in wv if ck.classes.get(v) == "block"}
+    logged: Set[str] = set()
+    if _try_linear(node.warp) is not None:
+        logged = (g - at) - loads - in_while
+    return _PRPlan(tuple(sorted(bvw)), tuple(sorted(sh)),
+                   tuple(sorted((g - logged))), tuple(sorted(at)),
+                   tuple(sorted(logged)))
 
 
 def _exec_masked_while(ins: K.While, env: _Env, mask, *, jit_mode: bool):
@@ -442,7 +605,7 @@ def _exec_masked_while(ins: K.While, env: _Env, mask, *, jit_mode: bool):
         return
 
     mask_in = jnp.ones((env.W,), jnp.bool_) if mask is None else mask
-    wv, arrays, sh = _written_names(ins.body)
+    wv, arrays, sh, _ = _written_names(ins.body)
 
     def snap():
         return {
@@ -454,6 +617,8 @@ def _exec_masked_while(ins: K.While, env: _Env, mask, *, jit_mode: bool):
                    if k in env.store_masks},
             "ad": {k: env.atomic_deltas[k] for k in arrays
                    if k in env.atomic_deltas},
+            "shm": {k: env.shared_masks[k] for k in sh
+                    if k in env.shared_masks},
         }
 
     def load(st):
@@ -463,6 +628,7 @@ def _exec_masked_while(ins: K.While, env: _Env, mask, *, jit_mode: bool):
         env.globals.update(st["g"])
         env.store_masks.update(st["sm"])
         env.atomic_deltas.update(st["ad"])
+        env.shared_masks.update(st["shm"])
 
     def active(st) -> Any:
         load(st)
@@ -571,13 +737,37 @@ def _try_linear(g) -> Optional[List[WarpPR]]:
 
 
 def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
-                  simd: bool = True, track_writes: bool = False):
+                  simd: bool = True, track_writes: bool = False,
+                  warp_exec: str = "serial"):
     """Build ``f(uniforms, globals[, masks, deltas]) -> (globals, masks,
     deltas)`` executing one CUDA block.  ``uniforms`` must contain bid,
-    bdim, gdim and every scalar kernel parameter."""
+    bdim, gdim and every scalar kernel parameter.
+
+    ``warp_exec='batched'`` replaces the inter-warp loop with a
+    ``jax.vmap`` over the warp axis: every block-level PR runs all
+    ``n_warps`` warps at once as one ``(n_warps, W)`` lane plane, with
+    per-warp copies of shared/global memory merged at each PR boundary
+    (see the module docstring).  ``'serial'`` is the paper's Code 3
+    inter-warp loop.
+    """
+    if warp_exec not in ("serial", "batched"):
+        raise ValueError(f"unknown warp_exec {warp_exec!r}; "
+                         f"expected 'serial' or 'batched'")
     jit_mode = mode == "jit"
     W = ck.warp_size
-    has_atomics = any(isinstance(s, K.AtomicRMW) for s in _all_instrs(ck))
+    all_atomics = [s for s in _all_instrs(ck) if isinstance(s, K.AtomicRMW)]
+    has_atomics = bool(all_atomics)
+    batch_warps = warp_exec == "batched" and n_warps > 1
+    if batch_warps and any(s.dst for s in all_atomics):
+        # defense in depth — LaunchPlan.check_warp_batchable rejects
+        # these launches before tracing (see that docstring for why)
+        raise CoxUnsupported(
+            "atomic old-value capture under warp-batched execution: "
+            "captured old values are only unique under serial warp "
+            "order — use warp_exec='serial'")
+    from .backends import merge  # deferred: backends imports execute
+    pr_plans = ({n.id: _pr_plan(ck, n) for n in ck.machine.nodes
+                 if isinstance(n, BlockPR)} if batch_warps else {})
 
     def block_fn(uniforms: Dict[str, Any], globals_: Dict[str, Any],
                  store_masks=None, atomic_deltas=None):
@@ -590,13 +780,117 @@ def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
             store_masks = store_masks if store_masks is not None else {
                 k: jnp.zeros(v.shape, jnp.bool_) for k, v in globals_.items()}
             atomic_deltas = atomic_deltas if atomic_deltas is not None else ({
-                k: jnp.zeros_like(v) for k, v in globals_.items()}
+                k: jnp.zeros(v.shape, merge.num(v).dtype)
+                for k, v in globals_.items()}
                 if has_atomics else {})
         else:
             store_masks, atomic_deltas = {}, {}
 
+        def run_warp_plane(node: BlockPR, bv, sh, g, sm, ad):
+            """All warps of one block-level PR as a single (n_warps, W)
+            lane plane: ``jax.vmap`` over the warp axis of the warp-level
+            machine walk.  Sound because warps are independent between
+            barriers (COX's hierarchical-collapsing guarantee) and every
+            block-level PR boundary *is* a barrier boundary.
+
+            Each warp runs on its own copy of shared/global memory with
+            write-mask + atomic-delta tracking; the copies reconcile here
+            via the backends' bit-exact single-writer select merge
+            (masked integer-sum payload transport), so the
+            merged state is bitwise-identical to the serial inter-warp
+            loop for race-free kernels (atomic deltas sum order-free).
+            Block-replicated vars are written only at each warp's own
+            row, so the merged plane is the diagonal of the per-warp
+            copies.  All warps reach the same exit under the
+            aligned-barrier assumption; warp 0's is taken (the block-peel
+            analogue of "warp 0 lane 0 decides")."""
+            plan = pr_plans[node.id]
+            # under write-tracking (vmap/sharded grid backends) per-warp
+            # deltas start from the block's carried deltas so LoadGlobal
+            # still observes earlier PRs' atomic effects; under the
+            # loop-carried scan outer they start at zero (earlier deltas
+            # are already folded into g at each PR boundary)
+            ad_in = ad if track_writes else (
+                {k: jnp.zeros(g[k].shape, merge.num(g[k]).dtype)
+                 for k in plan.atomics})
+            log_names: List[str] = []
+
+            def one_warp(wid):
+                # dict copies: _Env mutates its dicts in place, and the
+                # carried sh/g must stay pristine for the post-vmap
+                # merge (aliasing would leak batched tracers into them).
+                # Block-replicated vars are handed over as this warp's
+                # own (W,) row — see _Env.block_rows.
+                env = _Env(
+                    ck, wid=wid, n_warps=n_warps, uniforms=uniforms,
+                    warp_vars={},
+                    block_vars={k: v[wid] for k, v in bv.items()},
+                    shmem=dict(sh), globals_=dict(g),
+                    simd=simd, track_writes=True, block_rows=True,
+                    store_masks={k: jnp.zeros(g[k].shape, jnp.bool_)
+                                 for k in plan.masked},
+                    atomic_deltas=dict(ad_in),
+                    shared_masks={k: jnp.zeros(sh[k].shape, jnp.bool_)
+                                  for k in plan.shared},
+                    log_arrays=set(plan.logged))
+                ex = run_warp_graph(node, env, jit_mode=jit_mode)
+                # the log structure is static (one trace): capture the
+                # entry order once, ship only the lane tensors out
+                log_names.clear()
+                log_names.extend(n for n, _, _ in env.store_log)
+                # return only what this PR can write — unbatched arrays
+                # stay broadcast constants with no copy/stack cost
+                return ({k: env.block_vars[k] for k in plan.block_vars},
+                        {k: env.shmem[k] for k in plan.shared},
+                        {k: env.shared_masks[k] for k in plan.shared},
+                        {k: env.globals[k] for k in plan.masked},
+                        {k: env.store_masks[k] for k in plan.masked},
+                        {k: env.atomic_deltas[k] for k in plan.atomics},
+                        [(i, v) for _, i, v in env.store_log],
+                        ex)
+
+            wids = jnp.arange(n_warps, dtype=jnp.int32)
+            bvs, shs, shms, gs, gms, ads, logs, exs = jax.vmap(one_warp)(wids)
+            # block-replicated vars: each warp ran on its own (W,) row,
+            # so the stacked rows ARE the merged (n_warps, W) plane
+            bv2 = {**bv, **bvs}
+            shm_in = {k: sh[k] for k in plan.shared}
+            sh_new, _, _ = merge.merge_chunk(shm_in, shs, shms, {},
+                                             fold_deltas=True)
+            sh2 = {**sh, **sh_new}
+            g_in = {k: g[k] for k in plan.masked}
+            if track_writes:
+                new_d = {k: ads[k] - ad_in[k][None] for k in ads}
+                g_new, wrote, dsum = merge.merge_chunk(
+                    g_in, gs, gms, new_d, fold_deltas=False)
+                sm = {**sm, **{k: sm[k] | wrote[k] for k in wrote}}
+                if dsum:
+                    ad = {**ad, **{k: merge.denum(
+                        merge.num(ad[k]) + dsum[k], ad[k].dtype)
+                        for k in dsum}}
+            else:
+                g_new, _, _ = merge.merge_chunk(g_in, gs, gms, ads,
+                                                fold_deltas=True)
+            g2 = {**g, **g_new}
+            # store-log replay: one flat scatter per logged store — the
+            # single-writer contract makes cross-warp lanes disjoint
+            # (masked-off lanes carry the one-past-end index and drop)
+            for name, (idx, val) in zip(log_names, logs):
+                g2[name] = g2[name].at[idx.reshape(-1)].set(
+                    val.reshape(-1), mode="drop")
+                if track_writes:
+                    sm = {**sm, name: sm[name].at[idx.reshape(-1)].set(
+                        True, mode="drop")}
+            return bv2, sh2, g2, sm, ad, exs[0]
+
         def run_block_pr(node: BlockPR, bv, sh, g, sm, ad):
-            """One inter-warp loop (paper's Code 3 outer loop)."""
+            """One block-level PR: the inter-warp loop (paper's Code 3
+            outer loop), or the batched (n_warps, W) warp plane."""
+            if batch_warps:
+                bv, sh, g, sm, ad, ex = run_warp_plane(node, bv, sh, g,
+                                                       sm, ad)
+                return _block_succ(node, ex), bv, sh, g, sm, ad
+
             def one_warp(wid, carry):
                 bv, sh, g, sm, ad, _ = carry
                 env = _Env(ck, wid=wid, n_warps=n_warps, uniforms=uniforms,
@@ -615,12 +909,14 @@ def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
             else:
                 carry = lax.fori_loop(0, n_warps, one_warp, init)
             bv, sh, g, sm, ad, ex = carry
+            return _block_succ(node, ex), bv, sh, g, sm, ad
+
+        def _block_succ(node: BlockPR, ex):
             succ = jnp.asarray(
                 [EXIT if s == EXIT else s for s in node.succ_ids] or [EXIT],
                 jnp.int32)
-            nxt = succ[jnp.clip(ex, 0, len(node.succ_ids) - 1)] \
+            return succ[jnp.clip(ex, 0, len(node.succ_ids) - 1)] \
                 if node.succ_ids else jnp.int32(EXIT)
-            return nxt, bv, sh, g, sm, ad
 
         nodes = ck.machine.nodes
         linear = _try_linear_block(ck.machine)

@@ -18,6 +18,8 @@ from __future__ import annotations
 
 from typing import Optional
 
+import numpy as np
+
 from . import kernel_ir as K
 from .types import BarrierLevel, CoxUnsupported
 
@@ -125,14 +127,97 @@ def choose_backend(kernel: K.Kernel, *, grid: int, mesh=None,
 
 
 def choose_mode(kernel: K.Kernel, *, n_warps: int,
-                requested: str = "normal") -> str:
-    """Resolve the execution mode.  'auto' burns the block size in (jit
-    mode: inter-warp loop unrolled) only when the block is a single
-    warp — there the unrolled form has no loop at all and no bloat; for
-    wider blocks the fori-loop 'normal' mode traces smaller programs and
-    the paper's Fig-13 JIT advantage does not transfer to XLA."""
+                requested: str = "auto") -> str:
+    """Resolve the execution mode ('auto' is the default, end to end
+    from ``api.launch``).  'auto' burns the block size in (jit mode:
+    inter-warp loop unrolled) only when the block is a single warp —
+    there the unrolled form has no loop at all and no bloat; for wider
+    blocks the fori-loop 'normal' mode traces smaller programs and the
+    paper's Fig-13 JIT advantage does not transfer to XLA."""
     if requested in ("normal", "jit"):
         return requested
     if requested != "auto":
         raise ValueError(f"unknown mode {requested!r}")
     return "jit" if n_warps == 1 else "normal"
+
+
+# ---------------------------------------------------------------------------
+# Warp-execution dispatch: serial inter-warp loop vs batched (n_warps, W)
+# lane plane.  Same shape again: explicit requests validated and honored,
+# 'auto' applies the heuristic.
+# ---------------------------------------------------------------------------
+
+# per-block budget for the batched plane's per-warp shared-memory copies
+# (shmem bytes × n_warps): CUDA shared memory tops out around 100 KiB
+# per block and n_warps ≤ 32, so real kernels always fit — the budget
+# guards synthetic giant-shmem kernels from exploding the vmap footprint
+WARP_BATCH_SHMEM_BUDGET = 4 << 20
+
+
+def shared_footprint(kernel: K.Kernel) -> int:
+    """Static shared-memory bytes per block."""
+    total = 0
+    for s in kernel.shared:
+        n = 1
+        for d in s.shape:
+            n *= int(d)
+        total += n * np.dtype(s.dtype.jnp).itemsize
+    return total
+
+
+def choose_warp_exec(kernel: K.Kernel, *, n_warps: int,
+                     requested: str = "auto", machine=None) -> str:
+    """Resolve how warps run within each block-level PR.
+
+    'batched' exposes the warp axis to XLA: all warps of a PR run as
+    one (n_warps, W) lane plane (``jax.vmap`` over the warp-level
+    machine walk), multiplying the parallelism the compiler sees —
+    grid-chunk × warps × lanes.  'serial' is the paper's Code 3
+    inter-warp loop.
+
+    Heuristic ('auto', measured on the coverage suite — BENCH_PR2.json):
+    batch when the block has more than one warp, the kernel keeps
+    per-block state in **shared memory** (the blockwise-internal-work
+    signal, same as ``choose_backend``'s vmap test), the per-warp
+    shared-memory copies fit the size budget (``shared_footprint ×
+    n_warps ≤ WARP_BATCH_SHMEM_BUDGET``), and — when the caller
+    supplies the compiled ``machine`` — the warp graphs are peel-free:
+    a batched PC machine must run *every* ``lax.switch`` branch and
+    select per warp, which loses to the serial loop's one-branch
+    dispatch (0.4x on peel-heavy warp reductions).  The payoff scales
+    with how much non-fusable per-warp work a PR holds: ~1.5x on a
+    collective-dense shared kernel at 8 warps (2x with the scalar
+    collective backend, whose per-lane loop ops the plane divides by
+    n_warps), roughly parity on gather-bound tiled matmul.  Pure
+    streaming/vote kernels stay serial: their per-PR lane work is too
+    small to amortize the per-warp copy + merge.
+
+    Kernels that capture atomic old values (:func:`captures_atomic_old`)
+    stay serial — captured old values are only unique under a serial
+    warp order, exactly the scan-only argument one level up — and an
+    explicit 'batched' request for such a kernel is rejected.
+    """
+    if requested == "batched":
+        if captures_atomic_old(kernel):
+            raise CoxUnsupported(
+                f"kernel '{kernel.name}' captures atomic old values "
+                f"(atomic_add_old): old values are only unique under a "
+                f"serial warp order, which warp-batched execution "
+                f"cannot reproduce — use warp_exec='serial'")
+        return requested
+    if requested == "serial":
+        return requested
+    if requested != "auto":
+        raise ValueError(f"unknown warp_exec {requested!r}; "
+                         f"expected 'serial', 'batched' or 'auto'")
+    if n_warps <= 1 or captures_atomic_old(kernel):
+        return "serial"
+    if not kernel.shared:
+        return "serial"
+    if shared_footprint(kernel) * n_warps > WARP_BATCH_SHMEM_BUDGET:
+        return "serial"
+    if machine is not None:
+        from .regions import warp_peel_count
+        if warp_peel_count(machine) > 0:
+            return "serial"
+    return "batched"

@@ -15,7 +15,14 @@ Partitioning (constructive form of Algorithm 2):
   was predicated by the frontend).
 
 The executor wraps each block-level PR in one inter-warp loop and runs
-its warp-level machine per warp — the generated-code shape of Code 3.
+its warp-level machine per warp — the generated-code shape of Code 3 —
+or, under warp-batched execution, runs all warps of the PR at once as a
+(n_warps, W) lane plane (``execute.py``).  Warp-peel nodes resolve
+their branch direction from lane 0 of the condition; in the batched
+plane that decision becomes **per-warp** — each warp's lane 0 steers
+that warp's own PC through the warp graph, so warps may sit at
+different peel targets simultaneously (vmap's masked while/switch
+batching keeps finished warps frozen).
 
 Invariant (paper: "a warp-level PR is always a subset of a block-level
 PR"): holds by construction and is property-tested.
@@ -85,6 +92,18 @@ class Machine:
     nodes: List[object]
     entry: int
     cfg: CFG
+
+
+def warp_peel_count(machine: Machine) -> int:
+    """Number of warp-level peel nodes across all block-level PRs — the
+    lane-0-resolved branches whose directions become per-warp under
+    warp-batched execution.  0 means every warp graph is a straight
+    chain and the batched plane never diverges at the PC level."""
+    n = 0
+    for node in machine.nodes:
+        if isinstance(node, BlockPR) and node.warp is not None:
+            n += sum(isinstance(w, WarpPeel) for w in node.warp.nodes)
+    return n
 
 
 # ----------------------------------------------------------------------------

@@ -34,42 +34,54 @@ from .execute import CompiledKernel
 
 
 def build_launcher(ck: CompiledKernel, *, grid: int, block: int,
-                   mode: str = "normal", simd: bool = True,
+                   mode: str = "auto", simd: bool = True,
                    mesh: Optional[Mesh] = None, axis: str = "data",
-                   backend: str = "auto", chunk: Optional[int] = None):
-    """Resolve (backend, mode), build the plan, and stage the jitted
-    executable.  Returns ``(plan, exe)`` with
+                   backend: str = "auto", chunk: Optional[int] = None,
+                   warp_exec: str = "auto"):
+    """Resolve (backend, mode, warp_exec), build the plan, and stage the
+    jitted executable.  Returns ``(plan, exe)`` with
     ``exe(globals_, scalars) -> {name: flat array}``."""
     bname = _flat.choose_backend(ck.kernel, grid=grid, mesh=mesh,
                                  requested=backend)
     n_warps = -(-block // ck.warp_size)
     mode = _flat.choose_mode(ck.kernel, n_warps=n_warps, requested=mode)
+    warp_exec = _flat.choose_warp_exec(ck.kernel, n_warps=n_warps,
+                                       requested=warp_exec,
+                                       machine=ck.machine)
     plan = LaunchPlan.build(ck, grid=grid, block=block, mode=mode,
-                            simd=simd, chunk=chunk)
+                            simd=simd, chunk=chunk, warp_exec=warp_exec)
     exe = _backends.get_backend(bname).build(plan, mesh=mesh, axis=axis)
     return plan, exe
 
 
 def launch(ck: CompiledKernel, *, grid: int, block: int, args: Sequence[Any],
-           mode: str = "normal", simd: bool = True,
+           mode: str = "auto", simd: bool = True,
            mesh: Optional[Mesh] = None, axis: str = "data",
            backend: str = "auto", chunk: Optional[int] = None,
+           warp_exec: str = "auto",
            donate: bool = False) -> Dict[str, jnp.ndarray]:
     """Run ``kernel<<<grid, block>>>(*args)``; returns {array name: value}.
 
-    mode='normal' (default) uses loop-carried execution — on XLA the
-    trace is already shape-specialized, so the paper's JIT mode (grid/
-    block burned in, loops unrolled) only bloats the program; the Fig-13
-    advantage does NOT transfer (EXPERIMENTS.md §Benchmarks).  mode='jit'
-    remains available for the comparison, mode='auto' picks per block
-    shape.
+    mode='auto' (default) resolves to loop-carried 'normal' execution
+    for multi-warp blocks — on XLA the trace is already
+    shape-specialized, so the paper's JIT mode (grid/block burned in,
+    loops unrolled) only bloats the program; the Fig-13 advantage does
+    NOT transfer (EXPERIMENTS.md §Benchmarks) — and to 'jit' for
+    single-warp blocks, where unrolling is free.  mode='jit'/'normal'
+    remain available for the comparison.
+
+    warp_exec='auto' (default) batches the inter-warp loop into one
+    (n_warps, W) lane plane whenever the block has more than one warp
+    and the per-warp shared-memory copies fit the budget
+    (``flat.choose_warp_exec``); 'serial'/'batched' force either path.
 
     This is the uncached entry point; ``KernelFn.launch`` adds a
     launch-level compile cache so repeat launches skip retracing.
     """
     plan, exe = build_launcher(ck, grid=grid, block=block, mode=mode,
                                simd=simd, mesh=mesh, axis=axis,
-                               backend=backend, chunk=chunk)
+                               backend=backend, chunk=chunk,
+                               warp_exec=warp_exec)
     globals_, shapes, scalars = plan.bind_args(args)
     out = exe(globals_, scalars)
     return {k: v.reshape(shapes[k]) for k, v in out.items()}

@@ -1,12 +1,14 @@
-"""Backend equivalence: scan ≡ vmap ≡ sharded.
+"""Backend equivalence: scan ≡ vmap ≡ sharded, serial ≡ batched warps.
 
 The grid-execution backends (repro.core.backends) must agree exactly —
 plain stores are single-writer-selected (no arithmetic on the payload),
 so vmap/sharded outputs are bitwise-identical to the loop-carried scan
 baseline; atomic deltas are integer-valued in these kernels, so their
-sums are exact too.  Covers the full coverage suite (warp-feature
-kernels included), atomics, grid sizes not divisible by the chunk size,
-and the launch-cache / heuristic plumbing.
+sums are exact too.  The same bar holds one level down: warp-batched
+execution (the (n_warps, W) lane plane) must be bitwise-identical to
+the serial inter-warp loop across the full suite.  Covers the coverage
+suite (warp-feature kernels included), atomics, grid sizes not
+divisible by the chunk size, and the launch-cache / heuristic plumbing.
 """
 import numpy as np
 import pytest
@@ -78,6 +80,262 @@ def test_atomics_plus_stores_in_one_kernel():
         np.testing.assert_array_equal(got["total"], want["total"])
         np.testing.assert_array_equal(got["partial"], want["partial"])
     assert want["total"][0] == 900
+
+
+# ---------------------------------------------------------------------------
+# warp-batched execution: the (n_warps, W) lane plane ≡ the serial
+# inter-warp loop, bitwise, across the full suite
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sk", RUNNABLE, ids=lambda sk: sk.name)
+def test_warp_batched_bitwise_matches_serial(sk):
+    """Full suite through warp_exec='batched' vs 'serial' on the scan
+    backend — shared memory, warp collectives, peels, atomics, partial
+    warps included."""
+    args = sk.make_args()
+    want = _launch(sk, args, backend="scan", warp_exec="serial")
+    got = _launch(sk, args, backend="scan", warp_exec="batched")
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k],
+                                      err_msg=f"{sk.name}.{k}")
+
+
+@pytest.mark.parametrize("name", ["MatrixMulCUDA", "reduce0", "reduce4",
+                                  "histogram64", "blockCounter"])
+def test_warp_batched_composes_with_block_vmap(name):
+    """grid-chunk × warp × lane batching all at once: the vmap backend
+    with batched warps must still equal scan with serial warps."""
+    sk = next(k for k in all_kernels() if k.name == name)
+    args = sk.make_args()
+    want = _launch(sk, args, backend="scan", warp_exec="serial")
+    got = _launch(sk, args, backend="vmap", chunk=3, warp_exec="batched")
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k],
+                                      err_msg=f"{name}.{k}")
+
+
+def test_warp_batched_on_one_device_mesh():
+    import jax
+    sk = next(k for k in all_kernels() if k.name == "MatrixMulCUDA")
+    mesh = jax.make_mesh((1,), ("data",))
+    args = sk.make_args()
+    want = _launch(sk, args, backend="scan", warp_exec="serial")
+    got = _launch(sk, args, mesh=mesh, chunk=3, warp_exec="batched")
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+
+
+@cox.kernel
+def _k_warpstage(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    # n_warps>=4 acceptance kernel: shared memory + warp collective +
+    # block barrier + cross-warp shared reads after the barrier
+    tile = c.shared((4,), cox.f32)
+    tid = c.thread_idx()
+    v = a[c.block_idx() * c.block_dim() + tid]
+    s = c.red_add(v)
+    if c.lane_id() == 0:
+        tile[c.warp_id()] = s
+    c.syncthreads()
+    t = tile[tid % 4]
+    out[c.block_idx() * c.block_dim() + tid] = v + t
+
+
+@cox.kernel
+def _k_warpstage_partial(c, out: cox.Array(cox.f32),
+                         a: cox.Array(cox.f32), n: cox.i32):
+    # same shape but with a partial last warp (launched at block=112:
+    # 4 warps, the last one half dead)
+    tile = c.shared((4,), cox.f32)
+    tid = c.thread_idx()
+    i = c.block_idx() * c.block_dim() + tid
+    v = 0.0
+    if i < n:
+        v = a[i]
+    s = c.red_add(v)
+    if c.lane_id() == 0:
+        tile[c.warp_id()] = s
+    c.syncthreads()
+    t = tile[tid % 4]
+    if i < n:
+        out[i] = v + t
+
+
+def test_warp_batched_multiwarp_shared_collective_barrier():
+    """The acceptance shape: n_warps >= 4, shared memory, warp
+    collectives and block barriers — batched ≡ serial bitwise, and the
+    auto heuristic actually picks batched for it."""
+    from repro.core import flat as cf
+    rng = np.random.default_rng(3)
+    a = rng.integers(-8, 9, 256).astype(np.float32)
+    args = (np.zeros(256, np.float32), a)
+    want = _k_warpstage.launch(grid=2, block=128, args=args,
+                               warp_exec="serial")
+    got = _k_warpstage.launch(grid=2, block=128, args=args,
+                              warp_exec="batched")
+    np.testing.assert_array_equal(np.asarray(got["out"]),
+                                  np.asarray(want["out"]))
+    assert cf.choose_warp_exec(_k_warpstage.ir, n_warps=4) == "batched"
+
+
+def test_warp_batched_partial_last_warp():
+    rng = np.random.default_rng(4)
+    n = 200  # block=112 -> 4 warps, last warp half dead; tail dead too
+    a = rng.integers(-8, 9, 224).astype(np.float32)
+    args = (np.zeros(224, np.float32), a, n)
+    want = _k_warpstage_partial.launch(grid=2, block=112, args=args,
+                                       warp_exec="serial")
+    got = _k_warpstage_partial.launch(grid=2, block=112, args=args,
+                                      warp_exec="batched")
+    np.testing.assert_array_equal(np.asarray(got["out"]),
+                                  np.asarray(want["out"]))
+
+
+@cox.kernel
+def _k_store_in_while(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32),
+                      n: cox.i32):
+    # stores inside a While body cannot use the store log (log entries
+    # can't escape a lax.while trace) — they must take the masked path
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    j = 0
+    while j < i % 5:
+        out[i * 5 + j] = a[i] + c.f32(j)
+        j = j + 1
+
+
+@cox.kernel
+def _k_store_then_load(c, out: cox.Array(cox.f32), acc: cox.Array(cox.f32),
+                       a: cox.Array(cox.f32)):
+    # same-lane reload after a store in one PR: the stored array is
+    # loaded in the PR, so it must not be logged (a logged store skips
+    # the per-warp copy the reload would read)
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    acc[i] = a[i] * 2.0
+    v = acc[i]
+    out[i] = v + 1.0
+
+
+@pytest.mark.parametrize("kern,args_fn", [
+    (_k_store_in_while,
+     lambda rng: (np.zeros(1280, np.float32),
+                  rng.normal(size=256).astype(np.float32), 1280)),
+    (_k_store_then_load,
+     lambda rng: (np.zeros(128, np.float32), np.zeros(128, np.float32),
+                  rng.normal(size=128).astype(np.float32))),
+], ids=["store-in-while", "store-then-load"])
+def test_store_log_ineligible_paths_stay_exact(kern, args_fn):
+    rng = np.random.default_rng(9)
+    args = args_fn(rng)
+    want = kern.launch(grid=4, block=64, args=args, warp_exec="serial")
+    for backend in ("scan", "vmap"):
+        got = kern.launch(grid=4, block=64, args=args, backend=backend,
+                          warp_exec="batched")
+        for k in want:
+            np.testing.assert_array_equal(
+                np.asarray(got[k]), np.asarray(want[k]),
+                err_msg=f"{kern.name}.{k} [{backend}]")
+
+
+def test_pr_plan_classifies_store_paths():
+    from repro.core.execute import _pr_plan
+    from repro.core.regions import BlockPR
+    ck = _k_store_then_load.compiled(block=64)
+    plans = [_pr_plan(ck, n) for n in ck.machine.nodes
+             if isinstance(n, BlockPR)]
+    logged = {a for p in plans for a in p.logged}
+    masked = {a for p in plans for a in p.masked}
+    assert "out" in logged          # written, never read -> log path
+    assert "acc" in masked          # reloaded after store -> masked path
+    ck2 = _k_store_in_while.compiled(block=64)
+    plans2 = [_pr_plan(ck2, n) for n in ck2.machine.nodes
+              if isinstance(n, BlockPR)]
+    assert "out" in {a for p in plans2 for a in p.masked}
+    assert "out" not in {a for p in plans2 for a in p.logged}
+
+
+def test_choose_warp_exec_heuristic():
+    from repro.core import flat as cf
+    from repro.core.regions import warp_peel_count
+    mm = next(k for k in all_kernels() if k.name == "MatrixMulCUDA")
+    r4 = next(k for k in all_kernels() if k.name == "reduce4")
+    # shared-memory kernel, peel-free machine: batched
+    ck = mm.kernel.compiled(block=mm.block)
+    assert warp_peel_count(ck.machine) == 0
+    assert cf.choose_warp_exec(mm.kernel.ir, n_warps=8,
+                               machine=ck.machine) == "batched"
+    # single warp: nothing to batch
+    assert cf.choose_warp_exec(mm.kernel.ir, n_warps=1) == "serial"
+    # no shared memory (streaming SPMD): per-PR lane work too small
+    assert cf.choose_warp_exec(_k_id.ir, n_warps=8) == "serial"
+    # peel-heavy warp graphs: batched switch runs every branch — serial
+    ck4 = r4.kernel.compiled(block=r4.block)
+    assert warp_peel_count(ck4.machine) > 0
+    assert cf.choose_warp_exec(r4.kernel.ir, n_warps=8,
+                               machine=ck4.machine) == "serial"
+    # explicit requests pass through (peels and all)
+    assert cf.choose_warp_exec(r4.kernel.ir, n_warps=8,
+                               requested="batched") == "batched"
+    assert cf.choose_warp_exec(mm.kernel.ir, n_warps=8,
+                               requested="serial") == "serial"
+    with pytest.raises(ValueError):
+        cf.choose_warp_exec(mm.kernel.ir, n_warps=8, requested="simd")
+
+
+def test_choose_warp_exec_shmem_budget():
+    from repro.core import flat as cf
+
+    @cox.kernel
+    def _k_bigshared(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+        tile = c.shared((40000,), cox.f32)
+        tid = c.thread_idx()
+        tile[tid] = a[tid]
+        c.syncthreads()
+        out[tid] = tile[tid]
+
+    # 160 KB of shared memory x 32 warps = 5 MB > the 4 MiB budget
+    assert cf.shared_footprint(_k_bigshared.ir) == 160000
+    assert cf.choose_warp_exec(_k_bigshared.ir, n_warps=32) == "serial"
+    assert cf.choose_warp_exec(_k_bigshared.ir, n_warps=4) == "batched"
+
+
+def test_warp_batched_rejects_atomic_old_capture():
+    """Ticket semantics need a serial warp order: auto routes to
+    serial, an explicit batched request is rejected — at the heuristic,
+    at plan build, and in make_block_fn (defense in depth)."""
+    from repro.core import flat as cf
+    from repro.core.execute import make_block_fn
+    assert cf.choose_warp_exec(_k_ticket.ir, n_warps=4) == "serial"
+    with pytest.raises(CoxUnsupported):
+        cf.choose_warp_exec(_k_ticket.ir, n_warps=4, requested="batched")
+    ck = _k_ticket.compiled(block=64)
+    with pytest.raises(CoxUnsupported):
+        LaunchPlan.build(ck, grid=4, block=64, warp_exec="batched")
+    with pytest.raises(CoxUnsupported):
+        make_block_fn(ck, n_warps=2, warp_exec="batched")
+
+
+def test_launch_plan_requires_resolved_knobs():
+    ck = _k_id.compiled(block=64)
+    with pytest.raises(ValueError):
+        LaunchPlan.build(ck, grid=2, block=64, mode="auto")
+    with pytest.raises(ValueError):
+        LaunchPlan.build(ck, grid=2, block=64, warp_exec="auto")
+    plan = LaunchPlan.build(ck, grid=2, block=64)
+    assert plan.warp_exec == "serial" and plan.mode == "normal"
+
+
+def test_launch_cache_splits_on_warp_exec():
+    sk = next(k for k in all_kernels() if k.name == "MatrixMulCUDA")
+    args = sk.make_args()
+    sk.kernel.launch(grid=sk.grid, block=sk.block, args=args,
+                     warp_exec="serial")
+    n1 = len(sk.kernel._launch_cache)
+    sk.kernel.launch(grid=sk.grid, block=sk.block, args=args,
+                     warp_exec="batched")
+    assert len(sk.kernel._launch_cache) == n1 + 1
+    sk.kernel.launch(grid=sk.grid, block=sk.block, args=args,
+                     warp_exec="batched")
+    assert len(sk.kernel._launch_cache) == n1 + 1
 
 
 # ---------------------------------------------------------------------------
@@ -168,6 +426,23 @@ def test_choose_mode_auto_unrolls_single_warp():
         == "normal"
     assert cox_flat.choose_mode(_k_id.ir, n_warps=1, requested="normal") \
         == "normal"
+    # 'auto' is the signature default, end to end
+    import inspect
+    from repro.core.api import KernelFn
+    from repro.core.runtime import build_launcher, launch
+    assert inspect.signature(cox_flat.choose_mode) \
+        .parameters["requested"].default == "auto"
+    for fn in (KernelFn.launch, build_launcher, launch):
+        assert inspect.signature(fn).parameters["mode"].default == "auto"
+
+
+def test_mode_auto_resolves_to_jit_for_single_warp_launch():
+    """A default (mode='auto') single-warp launch stages a jit-mode
+    plan — the resolved knob is what lands in the LaunchPlan."""
+    args = (np.zeros(32, np.float32), np.ones(32, np.float32))
+    _k_id.launch(grid=1, block=32, args=args)
+    plans = [p for (p, _) in _k_id._launch_cache.values()]
+    assert any(p.mode == "jit" and p.block == 32 for p in plans)
 
 
 def test_backend_registry():

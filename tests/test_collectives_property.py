@@ -1,0 +1,288 @@
+"""Collectives parity across every execution flavor.
+
+Two layers:
+
+* **collective level** — every entry in ``collectives.VECTORIZED`` /
+  ``SCALAR`` agrees with itself across (a) the SIMD lane-vector and
+  per-lane-loop scalar backends and (b) 1-D ``(W,)`` buffers vs a
+  leading warp axis ``(n_warps, W)`` (the batched executor's lane
+  plane), including sub-warp tile widths and partial-last-warp masks.
+  Deterministic parametrized cases always run; a hypothesis fuzz layer
+  widens the input space when hypothesis is installed.
+* **launch level** — kernels exercising each collective give identical
+  results under ``simd=True/False`` × ``warp_exec='serial'/'batched'``,
+  with sub-warp tiles and a partial last warp (block=48: the second
+  warp has 16 dead lanes).
+
+Buffers hold small-integer values so float reductions are exact in any
+association order — parity can be asserted bitwise.
+"""
+import numpy as np
+import pytest
+
+from repro.core import collectives as C
+from repro.core import cox
+
+W = 32
+RNG = np.random.default_rng(11)
+
+FUNCS = sorted(C.VECTORIZED)
+WIDTHS = (0, 8, 16)
+
+
+def _extra_args(func):
+    """Positional operand(s) each collective takes after the buffer."""
+    if func in ("shfl_down", "shfl_up"):
+        return (3,)
+    if func == "shfl_xor":
+        return (1,)
+    if func == "shfl_idx":
+        return (np.full(W, 2, np.int32),)
+    return ()
+
+
+def _buf(shape, func):
+    if func in ("vote_all", "vote_any", "ballot"):
+        return RNG.integers(0, 2, shape).astype(bool)
+    return RNG.integers(-8, 9, shape).astype(np.float32)
+
+
+def _mask(partial: bool):
+    if not partial:
+        return None
+    m = np.zeros(W, bool)
+    m[:16] = True  # a partial last warp: 16 live lanes
+    return m
+
+
+# ---------------------------------------------------------------------------
+# collective level
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("func", FUNCS)
+@pytest.mark.parametrize("width", WIDTHS)
+@pytest.mark.parametrize("partial", [False, True])
+def test_leading_warp_axis_matches_per_warp(func, width, partial):
+    """A (n_warps, W) plane through one call == each warp separately."""
+    n_warps = 4
+    buf = _buf((n_warps, W), func)
+    mask = _mask(partial)
+    extra = _extra_args(func)
+    fn = C.VECTORIZED[func]
+    plane = np.asarray(fn(buf, *extra, W=W, width=width, mask=mask))
+    rows = np.stack([np.asarray(fn(buf[i], *extra, W=W, width=width,
+                                   mask=mask)) for i in range(n_warps)])
+    np.testing.assert_array_equal(plane, rows, err_msg=f"{func}/w={width}")
+
+
+@pytest.mark.parametrize("func", FUNCS)
+@pytest.mark.parametrize("width", WIDTHS)
+@pytest.mark.parametrize("partial", [False, True])
+@pytest.mark.parametrize("lead", [(), (4,)])
+def test_scalar_backend_matches_vectorized(func, width, partial, lead):
+    """Table 2's w/o-AVX per-lane loops == the lane-vector backend, on
+    1-D buffers and on a leading warp axis."""
+    buf = _buf(lead + (W,), func)
+    mask = _mask(partial)
+    extra = _extra_args(func)
+    got = np.asarray(C.SCALAR[func](buf, *extra, W=W, width=width,
+                                    mask=mask))
+    want = np.asarray(C.VECTORIZED[func](buf, *extra, W=W, width=width,
+                                         mask=mask))
+    np.testing.assert_array_equal(got, want, err_msg=f"{func}/w={width}")
+
+
+@pytest.mark.parametrize("func", ["shfl_down", "shfl_up", "shfl_xor"])
+def test_scalar_backend_batches_array_extras(func):
+    """Per-warp extra operands (a (n_warps, W) offset plane) must work
+    through both backends — the scalar lift maps them with the buffer."""
+    n_warps = 3
+    buf = RNG.integers(-8, 9, (n_warps, W)).astype(np.float32)
+    off = np.broadcast_to(RNG.integers(1, 4, (n_warps, 1)),
+                          (n_warps, W)).astype(np.int32)
+    want = np.stack([
+        np.asarray(C.VECTORIZED[func](buf[i], off[i], W=W))
+        for i in range(n_warps)])
+    got_v = np.asarray(C.VECTORIZED[func](buf, off, W=W))
+    got_s = np.asarray(C.SCALAR[func](buf, off, W=W))
+    np.testing.assert_array_equal(got_v, want)
+    np.testing.assert_array_equal(got_s, want)
+
+
+def test_invalid_tile_width_rejected():
+    from repro.core.types import CoxUnsupported
+    for bad in (3, 12, 64):
+        with pytest.raises(CoxUnsupported):
+            C.VECTORIZED["red_add"](np.ones(W, np.float32), W=W, width=bad)
+
+
+# hypothesis fuzz layer (skips cleanly when hypothesis is absent)
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    settings.register_profile("ci", deadline=None, max_examples=25)
+    settings.load_profile("ci")
+
+    @given(
+        func=st.sampled_from(FUNCS),
+        width=st.sampled_from((0, 4, 8, 16, 32)),
+        n_warps=st.integers(1, 6),
+        live=st.integers(1, W),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hyp_collective_parity(func, width, n_warps, live, seed):
+        rng = np.random.default_rng(seed)
+        if func in ("vote_all", "vote_any", "ballot"):
+            buf = rng.integers(0, 2, (n_warps, W)).astype(bool)
+        else:
+            buf = rng.integers(-8, 9, (n_warps, W)).astype(np.float32)
+        mask = np.zeros(W, bool)
+        mask[:live] = True
+        extra = _extra_args(func)
+        want = np.stack([
+            np.asarray(C.VECTORIZED[func](buf[i], *extra, W=W, width=width,
+                                          mask=mask))
+            for i in range(n_warps)])
+        plane_v = np.asarray(C.VECTORIZED[func](buf, *extra, W=W,
+                                                width=width, mask=mask))
+        plane_s = np.asarray(C.SCALAR[func](buf, *extra, W=W, width=width,
+                                            mask=mask))
+        np.testing.assert_array_equal(plane_v, want)
+        np.testing.assert_array_equal(plane_s, want)
+
+
+# ---------------------------------------------------------------------------
+# launch level: every collective through the real executor, all flavors
+# ---------------------------------------------------------------------------
+
+
+@cox.kernel
+def k_shfl_down(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    tid = c.thread_idx()
+    v = a[c.block_idx() * c.block_dim() + tid]
+    r = c.shfl_down(v, 3)
+    out[c.block_idx() * c.block_dim() + tid] = r
+
+
+@cox.kernel
+def k_shfl_down_tile8(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    tid = c.thread_idx()
+    v = a[c.block_idx() * c.block_dim() + tid]
+    r = c.shfl_down(v, 2, width=8)
+    out[c.block_idx() * c.block_dim() + tid] = r
+
+
+@cox.kernel
+def k_shfl_up(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    tid = c.thread_idx()
+    v = a[c.block_idx() * c.block_dim() + tid]
+    r = c.shfl_up(v, 5)
+    out[c.block_idx() * c.block_dim() + tid] = r
+
+
+@cox.kernel
+def k_shfl_xor(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    tid = c.thread_idx()
+    v = a[c.block_idx() * c.block_dim() + tid]
+    r = c.shfl_xor(v, 1)
+    out[c.block_idx() * c.block_dim() + tid] = r
+
+
+@cox.kernel
+def k_shfl_idx(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    tid = c.thread_idx()
+    v = a[c.block_idx() * c.block_dim() + tid]
+    r = c.shfl(v, 7)
+    out[c.block_idx() * c.block_dim() + tid] = r
+
+
+@cox.kernel
+def k_vote_all(c, out: cox.Array(cox.i32), a: cox.Array(cox.i32)):
+    tid = c.thread_idx()
+    r = c.vote_all(a[c.block_idx() * c.block_dim() + tid] > 0)
+    out[c.block_idx() * c.block_dim() + tid] = c.i32(r)
+
+
+@cox.kernel
+def k_vote_any(c, out: cox.Array(cox.i32), a: cox.Array(cox.i32)):
+    tid = c.thread_idx()
+    r = c.vote_any(a[c.block_idx() * c.block_dim() + tid] > 1)
+    out[c.block_idx() * c.block_dim() + tid] = c.i32(r)
+
+
+@cox.kernel
+def k_ballot(c, out: cox.Array(cox.u32), a: cox.Array(cox.i32)):
+    tid = c.thread_idx()
+    r = c.ballot(a[c.block_idx() * c.block_dim() + tid] > 0)
+    out[c.block_idx() * c.block_dim() + tid] = r
+
+
+@cox.kernel
+def k_red_add(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    tid = c.thread_idx()
+    v = a[c.block_idx() * c.block_dim() + tid]
+    r = c.red_add(v)
+    out[c.block_idx() * c.block_dim() + tid] = r
+
+
+@cox.kernel
+def k_red_add_tile16(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    tid = c.thread_idx()
+    v = a[c.block_idx() * c.block_dim() + tid]
+    r = c.red_add(v, width=16)
+    out[c.block_idx() * c.block_dim() + tid] = r
+
+
+@cox.kernel
+def k_red_max(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    tid = c.thread_idx()
+    v = a[c.block_idx() * c.block_dim() + tid]
+    r = c.red_max(v)
+    out[c.block_idx() * c.block_dim() + tid] = r
+
+
+@cox.kernel
+def k_red_min(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    tid = c.thread_idx()
+    v = a[c.block_idx() * c.block_dim() + tid]
+    r = c.red_min(v)
+    out[c.block_idx() * c.block_dim() + tid] = r
+
+
+LAUNCH_KERNELS = [
+    k_shfl_down, k_shfl_down_tile8, k_shfl_up, k_shfl_xor, k_shfl_idx,
+    k_vote_all, k_vote_any, k_ballot, k_red_add, k_red_add_tile16,
+    k_red_max, k_red_min,
+]
+
+
+def _launch_args(kern, block):
+    n = 2 * block
+    if kern.name in ("k_vote_all", "k_vote_any", "k_ballot"):
+        a = RNG.integers(0, 3, n).astype(np.int32)
+        dt = np.uint32 if kern.name == "k_ballot" else np.int32
+        return (np.zeros(n, dt), a)
+    a = RNG.integers(-8, 9, n).astype(np.float32)
+    return (np.zeros(n, np.float32), a)
+
+
+@pytest.mark.parametrize("kern", LAUNCH_KERNELS, ids=lambda k: k.name)
+@pytest.mark.parametrize("block", [128, 48])  # 48: partial last warp
+def test_launch_parity_all_flavors(kern, block):
+    """simd × warp_exec parity through the real executor; block=48
+    leaves the second warp with 16 dead lanes."""
+    args = _launch_args(kern, block)
+    want = np.asarray(kern.launch(grid=2, block=block, args=args,
+                                  simd=True, warp_exec="serial")["out"])
+    for simd in (True, False):
+        for wexec in ("serial", "batched"):
+            got = np.asarray(kern.launch(grid=2, block=block, args=args,
+                                         simd=simd, warp_exec=wexec)["out"])
+            np.testing.assert_array_equal(
+                got, want,
+                err_msg=f"{kern.name} block={block} simd={simd} {wexec}")
