@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` also
 writes every row (plus the structured backend-sweep matrix) to a
-machine-readable JSON file (default path ``BENCH_PR2.json``) so the
+machine-readable JSON file (default path ``BENCH_PR3.json``) so the
 perf trajectory is recorded across PRs.  ``--sections a,b`` runs a
 subset; ``--smoke`` is the CI regression guard (1 timing iteration,
 flagship kernels only).
@@ -66,6 +66,11 @@ def _block(out):
 def _row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
     RESULTS.append({"name": name, "us": round(us, 1), "derived": derived})
+
+
+def _total(dim) -> int:
+    """Linear size of an ``int | (x, y[, z])`` dim3 geometry."""
+    return dim if isinstance(dim, int) else int(np.prod(dim))
 
 
 # ---------------------------------------------------------------------------
@@ -223,15 +228,17 @@ def backend_sweep():
         mesh = jax.make_mesh((len(jax.devices()),), ("data",))
         backends.append("sharded")
 
-    picks = ("MatrixMulCUDA", "warpPrefixStats", "blockCounter") if SMOKE \
-        else ("vectorAdd", "MatrixMulCUDA", "reduce0", "reduce4",
+    picks = ("MatrixMulCUDA", "matrixMul1D", "transpose",
+             "warpPrefixStats", "blockCounter") if SMOKE \
+        else ("vectorAdd", "MatrixMulCUDA", "matrixMul1D", "transpose",
+              "stencil2d", "reduce0", "reduce4",
               "histogram64", "blockCounter", "saxpyHeavy",
               "warpPrefixStats")
     for sk in all_kernels():
         if sk.name not in picks:
             continue
         args = sk.make_args()
-        n_warps = -(-sk.block // 32)
+        n_warps = -(-_total(sk.block) // 32)
 
         def run(backend, warp_exec="serial", simd=True):
             kw = {"mesh": mesh} if backend == "sharded" else {}
@@ -277,6 +284,16 @@ def backend_sweep():
                         f"{entry['warp_batch_speedup_scan_noavx']:.2f}x")
         _row(f"backend_sweep.{sk.name}", times["vmap_batched"], derived)
         SWEEP_RESULTS.append(entry)
+
+    # dim3 overhead check: the natural 2-D matrixMul vs the hand-
+    # flattened 1-D port of the same kernel (acceptance: within 10%)
+    by_name = {e["kernel"]: e for e in SWEEP_RESULTS}
+    mm2, mm1 = by_name.get("MatrixMulCUDA"), by_name.get("matrixMul1D")
+    if mm2 and mm1:
+        ratios = {c: mm2["times_us"][c] / mm1["times_us"][c]
+                  for c in mm2["times_us"] if c in mm1["times_us"]}
+        _row("backend_sweep.matmul_2d_vs_1d", 0.0,
+             ";".join(f"{c}_ratio={r:.2f}x" for c, r in ratios.items()))
 
 
 # ---------------------------------------------------------------------------
@@ -335,10 +352,10 @@ SECTIONS = {
 def main(argv=None) -> None:
     global WARMUP, ITERS, SMOKE
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--json", nargs="?", const="BENCH_PR2.json", default=None,
+    p.add_argument("--json", nargs="?", const="BENCH_PR3.json", default=None,
                    metavar="PATH",
                    help="write machine-readable results (default path "
-                        "BENCH_PR2.json when the flag is given bare)")
+                        "BENCH_PR3.json when the flag is given bare)")
     p.add_argument("--sections", default=None,
                    help=f"comma-separated subset of {sorted(SECTIONS)}")
     p.add_argument("--smoke", action="store_true",

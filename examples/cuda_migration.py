@@ -5,6 +5,7 @@ CUDA (paper Fig. 8a)                 | here
 -------------------------------------+---------------------------------
 cudaMalloc / cudaMemcpy              | numpy / jnp arrays (host==device)
 vecCopy<<<grid_size, 1024>>>(a, b)   | vec_copy.launch(grid=..., block=...)
+kernel<<<dim3(4,4), dim3(16,16)>>>   | launch(grid=(4, 4), block=(16, 16))
 pthread fork/join per block          | lax.scan over blocks (single dev)
                                      | shard_map over mesh (multi dev)
 
@@ -19,6 +20,21 @@ from repro.core import cox
 def vec_copy(c, d_b: cox.Array(cox.f32), d_a: cox.Array(cox.f32)):
     i = c.block_idx() * c.block_dim() + c.thread_idx()
     d_b[i] = d_a[i]
+
+
+@cox.kernel
+def mat_transpose(c, odata: cox.Array(cox.f32), idata: cox.Array(cox.f32),
+                  n: cox.i32):
+    # the SDK's 2-D tiled transpose, unmodified dim3 indexing: no
+    # hand-flattening of threadIdx/blockIdx into linear arithmetic
+    tile = c.shared((16, 17), cox.f32)
+    x = c.block_idx('x') * 16 + c.thread_idx('x')
+    y = c.block_idx('y') * 16 + c.thread_idx('y')
+    tile[c.thread_idx('y'), c.thread_idx('x')] = idata[y * n + x]
+    c.syncthreads()
+    xo = c.block_idx('y') * 16 + c.thread_idx('x')
+    yo = c.block_idx('x') * 16 + c.thread_idx('y')
+    odata[yo * n + xo] = tile[c.thread_idx('x'), c.thread_idx('y')]
 
 
 def main():
@@ -43,6 +59,15 @@ def main():
                             mode="normal")
     assert np.array_equal(np.asarray(out_n["d_b"]), h_a)
     print("normal-mode launch: OK")
+
+    # dim3 launch geometry: transpose<<<dim3(4,4), dim3(16,16)>>>(o, i, n)
+    m = 64
+    h_m = np.random.default_rng(1).normal(size=(m, m)).astype(np.float32)
+    out_t = mat_transpose.launch(grid=(4, 4), block=(16, 16),
+                                 args=(np.zeros((m, m), np.float32), h_m, m))
+    assert np.array_equal(np.asarray(out_t["odata"]), h_m.T)
+    print(f"transposed a {m}x{m} matrix through a dim3(4,4)x(16,16) "
+          f"COX grid: OK")
 
 
 if __name__ == "__main__":

@@ -19,10 +19,11 @@ from typing import Any, Dict, Optional, Sequence
 
 from . import flat as _flat
 from . import kernel_ir as K
+from . import runtime as _runtime
 from .execute import CompiledKernel, compile_kernel
 from .frontend import Array, parse_kernel
-from .runtime import build_launcher as _build_launcher
-from .types import CoxUnsupported, DType, WARP_SIZE
+from .types import (CoxUnsupported, DType, Dim3, WARP_SIZE,  # noqa: F401
+                    as_dim3)  # Dim3 re-exported: cox.Dim3 launch geometry
 
 # dtype shorthands (annotation + c.shared dtype arguments)
 f32 = DType.f32
@@ -47,12 +48,11 @@ class KernelFn:
     def name(self) -> str:
         return self.ir.name
 
-    def compiled(self, *, collapse: str = "hybrid",
-                 warp_size: int = WARP_SIZE,
-                 block: Optional[int] = None) -> CompiledKernel:
-        """Run the pass pipeline.  collapse='flat' uses warp_size=block
-        (single block-wide loop; requires `block`); 'hier' is the paper's
-        hierarchical collapsing; 'hybrid' picks automatically."""
+    def _compile_key(self, *, collapse: str, warp_size: int,
+                     block: Optional[int]) -> tuple:
+        """The pass-pipeline cache key — also the stable per-compile
+        token in launch-cache keys (``id(ck)`` would be recycled by the
+        allocator if a compiled kernel were ever dropped)."""
         choice = _flat.choose_collapse(self.ir, collapse)
         if choice == "flat":
             if block is None:
@@ -61,42 +61,58 @@ class KernelFn:
             ws = block
         else:
             ws = warp_size
-        key = (choice, ws)
-        if key not in self._cache:
-            self._cache[key] = compile_kernel(self.ir, warp_size=ws)
-        return self._cache[key]
+        return (choice, ws)
 
-    def launch(self, *, grid: int, block: int, args: Sequence[Any],
+    def _compiled_for(self, key: tuple) -> CompiledKernel:
+        ck = self._cache.get(key)
+        if ck is None:
+            ck = self._cache[key] = compile_kernel(self.ir, warp_size=key[1])
+        return ck
+
+    def compiled(self, *, collapse: str = "hybrid",
+                 warp_size: int = WARP_SIZE,
+                 block=None) -> CompiledKernel:
+        """Run the pass pipeline.  collapse='flat' uses warp_size=block
+        (single block-wide loop; requires `block`, whose dim3 total is
+        used); 'hier' is the paper's hierarchical collapsing; 'hybrid'
+        picks automatically."""
+        if block is not None:
+            block = as_dim3(block, "block").total
+        return self._compiled_for(self._compile_key(
+            collapse=collapse, warp_size=warp_size, block=block))
+
+    def launch(self, *, grid, block, args: Sequence[Any],
                collapse: str = "hybrid", mode: str = "auto",
                simd: bool = True, warp_size: int = WARP_SIZE,
                mesh=None, axis: str = "data", backend: str = "auto",
                chunk: Optional[int] = None,
                warp_exec: str = "auto") -> Dict[str, Any]:
-        """Launch with backend dispatch (see ``repro.core.backends``):
+        """Launch with backend dispatch (see ``repro.core.backends``).
+
+        ``grid``/``block`` accept CUDA dim3 geometry — ``int | (x, y[,
+        z])`` — normalized to one canonical form (missing axes are 1),
+        so ``grid=4`` and ``grid=(4, 1, 1)`` share a cache entry.
         backend='auto'|'scan'|'vmap'|'sharded'; ``chunk`` bounds how many
         blocks the vmap-based backends run simultaneously;
         ``warp_exec='auto'|'serial'|'batched'`` picks between the serial
         inter-warp loop and the batched (n_warps, W) lane plane;
         ``mode='auto'|'normal'|'jit'`` picks loop-carried vs unrolled
         inter-warp iteration (all three resolved by ``repro.core.flat``
-        heuristics when 'auto')."""
-        ck = self.compiled(collapse=collapse, warp_size=warp_size, block=block)
-        bname = _flat.choose_backend(self.ir, grid=grid, mesh=mesh,
-                                     requested=backend)
-        n_warps = -(-block // ck.warp_size)
-        mode = _flat.choose_mode(self.ir, n_warps=n_warps, requested=mode)
-        wexec = _flat.choose_warp_exec(self.ir, n_warps=n_warps,
-                                       requested=warp_exec,
-                                       machine=ck.machine)
-        key = (id(ck), bname, mode, grid, block, n_warps, simd, chunk,
-               wexec, _mesh_key(mesh), axis)
+        heuristics when 'auto', keyed on the normalized totals)."""
+        block3 = as_dim3(block, "block")
+        token = self._compile_key(collapse=collapse, warp_size=warp_size,
+                                  block=block3.total)
+        ck = self._compiled_for(token)
+        rl = _runtime.resolve_launch(ck, grid=grid, block=block3, mode=mode,
+                                     backend=backend, warp_exec=warp_exec,
+                                     mesh=mesh)
+        key = (token, rl.backend, rl.mode, rl.grid.astuple(),
+               rl.block.astuple(), rl.n_warps, simd, chunk, rl.warp_exec,
+               _mesh_key(mesh), axis)
         cached = self._launch_cache.get(key)
         if cached is None:
-            plan, exe = _build_launcher(
-                ck, grid=grid, block=block, mode=mode, simd=simd,
-                mesh=mesh, axis=axis, backend=bname, chunk=chunk,
-                warp_exec=wexec)
-            cached = self._launch_cache[key] = (plan, exe)
+            cached = self._launch_cache[key] = _runtime.build_resolved(
+                ck, rl, simd=simd, mesh=mesh, axis=axis, chunk=chunk)
         plan, exe = cached
         globals_, shapes, scalars = plan.bind_args(args)
         out = exe(globals_, scalars)

@@ -72,7 +72,8 @@ def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
     plan.check_mergeable(name)
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
                              simd=plan.simd, track_writes=True,
-                             warp_exec=plan.warp_exec)
+                             warp_exec=plan.warp_exec,
+                             block_dim=plan.block_dim, grid_dim=plan.grid_dim)
     bid_chunks = plan.chunked_bids()
 
     def run(globals_, scalars):

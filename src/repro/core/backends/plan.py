@@ -16,17 +16,25 @@ import numpy as np
 
 from .. import kernel_ir as K
 from ..execute import CompiledKernel, walk_instrs
-from ..types import ArraySpec, CoxUnsupported
+from ..types import (ArraySpec, CoxUnsupported, Dim3, as_dim3,
+                     check_launch_geometry)
 
 DEFAULT_CHUNK = 8  # blocks run simultaneously per vmap step
 
 
 @dataclasses.dataclass(frozen=True)
 class LaunchPlan:
-    """Immutable description of one ``kernel<<<grid, block>>>`` launch."""
+    """Immutable description of one ``kernel<<<grid, block>>>`` launch.
+
+    ``grid``/``block`` are the *linear totals* — everything downstream
+    (chunk tables, warp counts, merge machinery, heuristics) keys on
+    them, so ``grid=4`` and ``grid=(4, 1, 1)`` build identical plans.
+    ``grid_dim``/``block_dim`` carry the canonical dim3 geometry for
+    the executor's per-axis intrinsics only.
+    """
     ck: CompiledKernel
-    grid: int
-    block: int
+    grid: int            # total blocks (grid_dim.total)
+    block: int           # total threads per block (block_dim.total)
     n_warps: int
     mode: str            # 'normal' | 'jit' (resolved, never 'auto')
     simd: bool
@@ -34,16 +42,18 @@ class LaunchPlan:
     has_atomics: bool
     captures_atomic_old: bool  # AtomicRMW with dst — serial-only
     warp_exec: str = "serial"  # 'serial' | 'batched' (resolved, never 'auto')
+    grid_dim: Optional[Dim3] = None   # canonical dim3 (set by build)
+    block_dim: Optional[Dim3] = None
 
     @classmethod
-    def build(cls, ck: CompiledKernel, *, grid: int, block: int,
+    def build(cls, ck: CompiledKernel, *, grid, block,
               mode: str = "normal", simd: bool = True,
               chunk: Optional[int] = None,
               warp_exec: str = "serial") -> "LaunchPlan":
-        if block <= 0 or grid <= 0:
-            raise ValueError("grid and block must be positive")
-        if block > 1024:
-            raise CoxUnsupported("CUDA blocks are limited to 1024 threads")
+        grid3 = as_dim3(grid, "grid")
+        block3 = as_dim3(block, "block")
+        check_launch_geometry(grid3, block3)
+        grid, block = grid3.total, block3.total
         if mode not in ("normal", "jit"):
             raise ValueError(f"mode must be resolved to 'normal' or 'jit' "
                              f"before plan build, got {mode!r} "
@@ -61,7 +71,7 @@ class LaunchPlan:
         plan = cls(ck, grid, block, n_warps, mode, simd, chunk,
                    has_atomics=bool(atomics),
                    captures_atomic_old=any(s.dst for s in atomics),
-                   warp_exec=warp_exec)
+                   warp_exec=warp_exec, grid_dim=grid3, block_dim=block3)
         plan.check_warp_batchable()
         return plan
 

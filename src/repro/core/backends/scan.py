@@ -21,7 +21,8 @@ name = "scan"
 def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
     """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher."""
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
-                             simd=plan.simd, warp_exec=plan.warp_exec)
+                             simd=plan.simd, warp_exec=plan.warp_exec,
+                             block_dim=plan.block_dim, grid_dim=plan.grid_dim)
 
     def run(globals_, scalars):
         def step(g, bid):

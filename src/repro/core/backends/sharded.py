@@ -32,7 +32,8 @@ def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
     ndev = mesh.shape[axis]
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
                              simd=plan.simd, track_writes=True,
-                             warp_exec=plan.warp_exec)
+                             warp_exec=plan.warp_exec,
+                             block_dim=plan.block_dim, grid_dim=plan.grid_dim)
     bid_table = jnp.asarray(plan.device_bid_table(ndev))
 
     def device_fn(dev_bids, g0, scalars):

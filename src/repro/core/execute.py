@@ -66,7 +66,7 @@ from .regions import (EXIT, BlockPR, BlockPeel, Machine, WarpPR, WarpPeel,
                       build_machine, replication_classes, warp_peel_count)
 from .typeinfer import infer
 from .types import (ArraySpec, BarrierLevel, CoxUnsupported, DType,
-                    ScalarSpec, SharedSpec)
+                    ScalarSpec, SharedSpec, dim3_tuple)
 
 _UNROLL_LIMIT = 64  # static-trip predicated loops up to this are unrolled in jit mode
 
@@ -152,8 +152,15 @@ class _Env:
                  atomic_deltas: Optional[Dict[str, Any]] = None,
                  shared_masks: Optional[Dict[str, Any]] = None,
                  block_rows: bool = False,
-                 log_arrays: Optional[Set[str]] = None):
+                 log_arrays: Optional[Set[str]] = None,
+                 block_dim3: Optional[Tuple[int, int, int]] = None,
+                 grid_dim3: Optional[Tuple[int, int, int]] = None):
         self.ck = ck
+        # static dim3 extents for the per-axis intrinsics; None means a
+        # 1-D launch whose extents live in the uniforms (tid_x/bid_x are
+        # the linear ids, y/z are zero)
+        self.block_dim3 = block_dim3
+        self.grid_dim3 = grid_dim3
         self.W = ck.warp_size
         self.wid = wid
         self.n_warps = n_warps
@@ -266,15 +273,7 @@ def eval_expr(e: K.Expr, env: _Env):
     if isinstance(e, K.Var):
         return env.read_var(e.name)
     if isinstance(e, K.Special):
-        if e.kind == "tid":
-            return jnp.asarray(env.wid, jnp.int32) * env.W + env.lane
-        if e.kind == "lane":
-            return env.lane
-        if e.kind == "wid":
-            return jnp.broadcast_to(jnp.asarray(env.wid, jnp.int32), (env.W,))
-        if e.kind == "wsize":
-            return jnp.asarray(env.W, jnp.int32)
-        return jnp.asarray(env.uniforms[e.kind], jnp.int32)  # bid/bdim/gdim
+        return _eval_special(e, env)
     if isinstance(e, K.BinOp):
         a, b = eval_expr(e.lhs, env), eval_expr(e.rhs, env)
         if e.op == "/":
@@ -334,6 +333,60 @@ def eval_expr(e: K.Expr, env: _Env):
         idx = eval_expr(e.index, env).astype(jnp.int32)
         return env.shmem[e.array].at[idx].get(mode="fill", fill_value=0)
     raise CoxUnsupported(f"cannot evaluate {e!r}")
+
+
+_AXIS_IX = {"x": 0, "y": 1, "z": 2}
+
+
+def _decompose(lin, extents, axis: str):
+    """x-fastest dim3 decomposition of a linear id against static
+    extents, with degenerate-axis shortcuts that keep 1-D launches free
+    of mod/div ops and 2-D launches down to one op per axis (lanes past
+    the logical extent — the partial last warp — produce out-of-range
+    components exactly as the linear path always has; their stores are
+    masked off)."""
+    dx, dy, dz = extents
+    if axis == "x":
+        return lin if dy == 1 and dz == 1 else lin % dx
+    if axis == "y":
+        if dy == 1:
+            return jnp.zeros_like(lin)
+        return lin // dx if dz == 1 else (lin // dx) % dy
+    return jnp.zeros_like(lin) if dz == 1 else lin // (dx * dy)
+
+
+def _eval_special(e: K.Special, env: _Env):
+    """Thread-identity intrinsics.  The schedule is linear (warps over
+    the x-fastest linearized block, a lax walk over linear block ids);
+    per-axis values are cheap decompositions against the launch's
+    static dim3 extents — per-lane (tx, ty, tz) vectors and per-block
+    (bx, by, bz) uniforms."""
+    if e.kind == "lane":
+        return env.lane
+    if e.kind == "wid":
+        return jnp.broadcast_to(jnp.asarray(env.wid, jnp.int32), (env.W,))
+    if e.kind == "wsize":
+        return jnp.asarray(env.W, jnp.int32)
+    axis = getattr(e, "axis", "x")
+    if e.kind == "tid":
+        lin = jnp.asarray(env.wid, jnp.int32) * env.W + env.lane
+        if env.block_dim3 is None:  # direct make_block_fn caller: 1-D
+            return lin if axis == "x" else jnp.zeros_like(lin)
+        return _decompose(lin, env.block_dim3, axis)
+    if e.kind == "bid":
+        bid = jnp.asarray(env.uniforms["bid"], jnp.int32)
+        if env.grid_dim3 is None:
+            return bid if axis == "x" else jnp.zeros_like(bid)
+        return _decompose(bid, env.grid_dim3, axis)
+    if e.kind == "bdim":
+        if env.block_dim3 is None:
+            return jnp.asarray(env.uniforms["bdim"], jnp.int32)
+        return jnp.asarray(env.block_dim3[_AXIS_IX[axis]], jnp.int32)
+    if e.kind == "gdim":
+        if env.grid_dim3 is None:
+            return jnp.asarray(env.uniforms["gdim"], jnp.int32)
+        return jnp.asarray(env.grid_dim3[_AXIS_IX[axis]], jnp.int32)
+    return jnp.asarray(env.uniforms[e.kind], jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -738,10 +791,16 @@ def _try_linear(g) -> Optional[List[WarpPR]]:
 
 def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
                   simd: bool = True, track_writes: bool = False,
-                  warp_exec: str = "serial"):
+                  warp_exec: str = "serial",
+                  block_dim=None, grid_dim=None):
     """Build ``f(uniforms, globals[, masks, deltas]) -> (globals, masks,
     deltas)`` executing one CUDA block.  ``uniforms`` must contain bid,
     bdim, gdim and every scalar kernel parameter.
+
+    ``block_dim``/``grid_dim`` are the launch's static dim3 extents
+    (Dim3 or tuple); they feed only the per-axis intrinsics — the
+    machine walk itself stays linear.  ``None`` (direct callers) means
+    a 1-D launch: ``tid_x``/``bid_x`` are the linear ids, y/z are 0.
 
     ``warp_exec='batched'`` replaces the inter-warp loop with a
     ``jax.vmap`` over the warp axis: every block-level PR runs all
@@ -755,6 +814,8 @@ def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
                          f"expected 'serial' or 'batched'")
     jit_mode = mode == "jit"
     W = ck.warp_size
+    bdim3 = dim3_tuple(block_dim)
+    gdim3 = dim3_tuple(grid_dim)
     all_atomics = [s for s in _all_instrs(ck) if isinstance(s, K.AtomicRMW)]
     has_atomics = bool(all_atomics)
     batch_warps = warp_exec == "batched" and n_warps > 1
@@ -832,7 +893,8 @@ def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
                     atomic_deltas=dict(ad_in),
                     shared_masks={k: jnp.zeros(sh[k].shape, jnp.bool_)
                                   for k in plan.shared},
-                    log_arrays=set(plan.logged))
+                    log_arrays=set(plan.logged),
+                    block_dim3=bdim3, grid_dim3=gdim3)
                 ex = run_warp_graph(node, env, jit_mode=jit_mode)
                 # the log structure is static (one trace): capture the
                 # entry order once, ship only the lane tensors out
@@ -896,7 +958,8 @@ def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
                 env = _Env(ck, wid=wid, n_warps=n_warps, uniforms=uniforms,
                            warp_vars={}, block_vars=bv, shmem=sh, globals_=g,
                            simd=simd, track_writes=track_writes,
-                           store_masks=sm, atomic_deltas=ad)
+                           store_masks=sm, atomic_deltas=ad,
+                           block_dim3=bdim3, grid_dim3=gdim3)
                 ex = run_warp_graph(node, env, jit_mode=jit_mode)
                 return (env.block_vars, env.shmem, env.globals,
                         env.store_masks, env.atomic_deltas, ex)

@@ -64,14 +64,23 @@ _WARP_FUNCS = {
 
 _SPECIALS = {
     "thread_idx": "tid",
-    "tid_x": "tid",
     "lane_id": "lane",
     "warp_id": "wid",
     "block_idx": "bid",
-    "bid_x": "bid",
     "block_dim": "bdim",
     "grid_dim": "gdim",
     "warp_size": "wsize",
+}
+
+# dim3 intrinsics accept an axis; bare calls mean 'x' (CUDA's .x), so
+# every 1-D kernel is untouched.  lane/wid/wsize are axis-less: warps
+# are a property of the x-fastest linearized thread order.
+_DIM3_KINDS = ("tid", "bid", "bdim", "gdim")
+
+# CUDA-style per-axis shorthands: c.tid_y() == c.thread_idx('y')
+_AXIS_ALIASES = {
+    f"{kind}_{ax}": (kind, ax)
+    for kind in _DIM3_KINDS for ax in ("x", "y", "z")
 }
 
 _UNARY_MATH = {"exp", "log", "sqrt", "rsqrt", "tanh", "sigmoid", "floor", "abs", "neg"}
@@ -207,8 +216,29 @@ class _Parser(ast.NodeVisitor):
             if isinstance(node.func, ast.Name) and node.func.id == "int":
                 return K.UnOp("i32", self.expr(node.args[0]))
             raise self.err(node, "unsupported call")
+        if attr in _AXIS_ALIASES:
+            kind, axis = _AXIS_ALIASES[attr]
+            if node.args or node.keywords:
+                raise self.err(node, f"{attr}() takes no arguments "
+                                     f"(the axis is in the name)")
+            return K.Special(kind, DType.i32, axis)
         if attr in _SPECIALS:
-            return K.Special(_SPECIALS[attr], DType.i32)
+            kind = _SPECIALS[attr]
+            axis = "x"
+            if node.args or node.keywords:
+                if node.keywords or len(node.args) != 1:
+                    raise self.err(node, f"{attr}() takes at most one "
+                                         f"positional axis argument")
+                if kind not in _DIM3_KINDS:
+                    raise self.err(node, f"{attr}() takes no axis argument "
+                                         f"(lane/warp ids are axis-less)")
+                a0 = node.args[0]
+                if not (isinstance(a0, ast.Constant)
+                        and a0.value in ("x", "y", "z")):
+                    raise self.err(node, f"{attr}() axis must be a literal "
+                                         f"'x', 'y' or 'z'")
+                axis = a0.value
+            return K.Special(kind, DType.i32, axis)
         if attr in _CASTS:
             return K.UnOp(attr, self.expr(node.args[0]), _CASTS[attr])
         if attr in _UNARY_MATH:

@@ -101,12 +101,22 @@ class Select(Expr):
 
 @dataclasses.dataclass
 class Special(Expr):
-    """Thread-identity intrinsics: tid, lane, wid, bid, bdim, gdim, wsize."""
+    """Thread-identity intrinsics: tid, lane, wid, bid, bdim, gdim, wsize.
+
+    tid/bid/bdim/gdim carry a dim3 ``axis`` ('x' default, so bare calls
+    keep their 1-D meaning): the executor decomposes the *linear*
+    thread/block id against the launch's static extents, x-fastest
+    (``x = lin % dim.x``, ``y = lin // dim.x % dim.y``,
+    ``z = lin // (dim.x * dim.y)``).  lane/wid/wsize are axis-less —
+    warps are a property of the linearized thread order, as on CUDA.
+    """
     kind: str
     dtype: Optional[DType] = None  # i32
+    axis: str = "x"
 
     def __repr__(self):
-        return f"%{self.kind}"
+        suffix = "" if self.axis == "x" else f".{self.axis}"
+        return f"%{self.kind}{suffix}"
 
 
 @dataclasses.dataclass

@@ -26,7 +26,7 @@ import numpy as np
 
 from . import kernel_ir as K
 from .types import (ArraySpec, BarrierLevel, CoxUnsupported, DType,
-                    ScalarSpec)
+                    ScalarSpec, dim3_tuple)
 
 
 class OracleMisaligned(Exception):
@@ -65,14 +65,25 @@ class _Thread:
                 return self.uniforms[e.name]
             return self.vars.get(e.name, 0)
         if isinstance(e, K.Special):
-            if e.kind == "tid":
-                return self.tid
             if e.kind == "lane":
                 return self.tid % self.W
             if e.kind == "wid":
                 return self.tid // self.W
             if e.kind == "wsize":
                 return self.W
+            ax = {"x": 0, "y": 1, "z": 2}[getattr(e, "axis", "x")]
+            if e.kind == "tid":
+                bx, by, _ = self.uniforms["bdim3"]
+                return (self.tid % bx, (self.tid // bx) % by,
+                        self.tid // (bx * by))[ax]
+            if e.kind == "bid":
+                gx, gy, _ = self.uniforms["gdim3"]
+                bid = self.uniforms["bid"]
+                return (bid % gx, (bid // gx) % gy, bid // (gx * gy))[ax]
+            if e.kind == "bdim":
+                return self.uniforms["bdim3"][ax]
+            if e.kind == "gdim":
+                return self.uniforms["gdim3"][ax]
             return self.uniforms[e.kind]
         if isinstance(e, K.BinOp):
             a, b = self.ev(e.lhs), self.ev(e.rhs)
@@ -289,8 +300,11 @@ def _collective(func: str, lanes: List[int], vals: Dict[int, Any],
 
 def run_block(kernel: K.Kernel, *, bid: int, block: int, grid: int,
               warp_size: int, scalars: Dict[str, Any],
-              globals_: Dict[str, np.ndarray], var_types: Dict[str, DType]):
-    uniforms = {"bid": bid, "bdim": block, "gdim": grid}
+              globals_: Dict[str, np.ndarray], var_types: Dict[str, DType],
+              block_dim=None, grid_dim=None):
+    uniforms = {"bid": bid, "bdim": block, "gdim": grid,
+                "bdim3": dim3_tuple(block_dim) or (block, 1, 1),
+                "gdim3": dim3_tuple(grid_dim) or (grid, 1, 1)}
     uniforms.update(scalars)
     shmem = {s.name: np.zeros(int(np.prod(s.shape)), _np(s.dtype))
              for s in kernel.shared}
@@ -382,10 +396,15 @@ def run_block(kernel: K.Kernel, *, bid: int, block: int, grid: int,
     raise CoxUnsupported("oracle scheduler guard tripped")
 
 
-def run_grid(kernel: K.Kernel, *, grid: int, block: int, args: Sequence[Any],
+def run_grid(kernel: K.Kernel, *, grid, block, args: Sequence[Any],
              warp_size: int = 32) -> Dict[str, np.ndarray]:
-    """Reference execution of kernel<<<grid, block>>>(*args)."""
+    """Reference execution of kernel<<<grid, block>>>(*args); ``grid``
+    and ``block`` accept ``int | (x, y[, z])`` dim3 geometry (threads
+    linearize x-fastest into warps, blocks into the grid walk)."""
     from .typeinfer import infer
+    from .types import as_dim3
+    grid3 = as_dim3(grid, "grid")
+    block3 = as_dim3(block, "block")
     var_types = infer(kernel)
     globals_: Dict[str, np.ndarray] = {}
     shapes: Dict[str, tuple] = {}
@@ -397,8 +416,8 @@ def run_grid(kernel: K.Kernel, *, grid: int, block: int, args: Sequence[Any],
             globals_[spec.name] = a.reshape(-1).copy()
         else:
             scalars[spec.name] = _np(spec.dtype)(val)
-    for bid in range(grid):
-        run_block(kernel, bid=bid, block=block, grid=grid,
+    for bid in range(grid3.total):
+        run_block(kernel, bid=bid, block=block3.total, grid=grid3.total,
                   warp_size=warp_size, scalars=scalars, globals_=globals_,
-                  var_types=var_types)
+                  var_types=var_types, block_dim=block3, grid_dim=grid3)
     return {k: v.reshape(shapes[k]) for k, v in globals_.items()}

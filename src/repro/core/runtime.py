@@ -22,6 +22,7 @@ functions of (bid, inputs), so any chunk can be re-executed anywhere;
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional, Sequence
 
 import jax.numpy as jnp
@@ -31,36 +32,77 @@ from . import backends as _backends
 from . import flat as _flat
 from .backends.plan import LaunchPlan
 from .execute import CompiledKernel
+from .types import Dim3, as_dim3, check_launch_geometry
 
 
-def build_launcher(ck: CompiledKernel, *, grid: int, block: int,
-                   mode: str = "auto", simd: bool = True,
-                   mesh: Optional[Mesh] = None, axis: str = "data",
-                   backend: str = "auto", chunk: Optional[int] = None,
-                   warp_exec: str = "auto"):
-    """Resolve (backend, mode, warp_exec), build the plan, and stage the
-    jitted executable.  Returns ``(plan, exe)`` with
-    ``exe(globals_, scalars) -> {name: flat array}``."""
-    bname = _flat.choose_backend(ck.kernel, grid=grid, mesh=mesh,
+@dataclasses.dataclass(frozen=True)
+class ResolvedLaunch:
+    """Launch knobs after dim3 normalization and 'auto' resolution —
+    the single canonical form every caller (``KernelFn.launch``'s cache
+    key, :func:`build_launcher`, tests) derives from.  The heuristics
+    key on the normalized *totals*, so ``grid=4`` and ``grid=(4,1,1)``
+    resolve identically."""
+    grid: Dim3
+    block: Dim3
+    backend: str    # 'scan' | 'vmap' | 'sharded'
+    mode: str       # 'normal' | 'jit'
+    warp_exec: str  # 'serial' | 'batched'
+    n_warps: int
+
+
+def resolve_launch(ck: CompiledKernel, *, grid, block,
+                   mode: str = "auto", backend: str = "auto",
+                   warp_exec: str = "auto",
+                   mesh: Optional[Mesh] = None) -> ResolvedLaunch:
+    """Normalize ``grid``/``block`` (``int | (x, y[, z])``) to canonical
+    dim3, enforce CUDA's launch limits, and resolve the 'auto' knobs via
+    the ``repro.core.flat`` heuristics.  This is the one place launch
+    knobs are resolved — dim3 normalization happens exactly once."""
+    grid3 = as_dim3(grid, "grid")
+    block3 = as_dim3(block, "block")
+    check_launch_geometry(grid3, block3)
+    bname = _flat.choose_backend(ck.kernel, grid=grid3.total, mesh=mesh,
                                  requested=backend)
-    n_warps = -(-block // ck.warp_size)
+    n_warps = -(-block3.total // ck.warp_size)
     mode = _flat.choose_mode(ck.kernel, n_warps=n_warps, requested=mode)
     warp_exec = _flat.choose_warp_exec(ck.kernel, n_warps=n_warps,
                                        requested=warp_exec,
                                        machine=ck.machine)
-    plan = LaunchPlan.build(ck, grid=grid, block=block, mode=mode,
-                            simd=simd, chunk=chunk, warp_exec=warp_exec)
-    exe = _backends.get_backend(bname).build(plan, mesh=mesh, axis=axis)
+    return ResolvedLaunch(grid3, block3, bname, mode, warp_exec, n_warps)
+
+
+def build_resolved(ck: CompiledKernel, rl: ResolvedLaunch, *,
+                   simd: bool = True, mesh: Optional[Mesh] = None,
+                   axis: str = "data", chunk: Optional[int] = None):
+    """Build the plan and stage the jitted executable for an
+    already-resolved launch.  Returns ``(plan, exe)`` with
+    ``exe(globals_, scalars) -> {name: flat array}``."""
+    plan = LaunchPlan.build(ck, grid=rl.grid, block=rl.block, mode=rl.mode,
+                            simd=simd, chunk=chunk, warp_exec=rl.warp_exec)
+    exe = _backends.get_backend(rl.backend).build(plan, mesh=mesh, axis=axis)
     return plan, exe
 
 
-def launch(ck: CompiledKernel, *, grid: int, block: int, args: Sequence[Any],
+def build_launcher(ck: CompiledKernel, *, grid, block,
+                   mode: str = "auto", simd: bool = True,
+                   mesh: Optional[Mesh] = None, axis: str = "data",
+                   backend: str = "auto", chunk: Optional[int] = None,
+                   warp_exec: str = "auto"):
+    """:func:`resolve_launch` + :func:`build_resolved` in one call."""
+    rl = resolve_launch(ck, grid=grid, block=block, mode=mode,
+                        backend=backend, warp_exec=warp_exec, mesh=mesh)
+    return build_resolved(ck, rl, simd=simd, mesh=mesh, axis=axis,
+                          chunk=chunk)
+
+
+def launch(ck: CompiledKernel, *, grid, block, args: Sequence[Any],
            mode: str = "auto", simd: bool = True,
            mesh: Optional[Mesh] = None, axis: str = "data",
            backend: str = "auto", chunk: Optional[int] = None,
            warp_exec: str = "auto",
            donate: bool = False) -> Dict[str, jnp.ndarray]:
     """Run ``kernel<<<grid, block>>>(*args)``; returns {array name: value}.
+    ``grid`` and ``block`` accept ``int | (x, y[, z])`` dim3 geometry.
 
     mode='auto' (default) resolves to loop-carried 'normal' execution
     for multi-warp blocks — on XLA the trace is already

@@ -15,6 +15,13 @@ import numpy as np
 
 WARP_SIZE = 32  # CUDA warpSize; configurable per-compile (TPU-native = 128 lanes)
 
+# CUDA launch-geometry limits (compute capability >= 2.x, the paper's
+# benchmark hardware): per-axis block caps, 1024 threads per block, and
+# the 65535 cap on grid y/z.
+CUDA_MAX_BLOCK = (1024, 1024, 64)
+CUDA_MAX_BLOCK_THREADS = 1024
+CUDA_MAX_GRID = (2**31 - 1, 65535, 65535)
+
 
 class CoxUnsupported(Exception):
     """Raised when a kernel uses a feature outside the supported set.
@@ -86,6 +93,79 @@ def promote(a: DType, b: DType) -> DType:
             return DType.f32
         return floats[0] if len(floats) == 1 else floats[0]
     return order[max(order.index(a), order.index(b))]
+
+
+@dataclasses.dataclass(frozen=True)
+class Dim3:
+    """CUDA ``dim3`` launch geometry.  The internal schedule stays
+    *linear* (CUDA's own model): threads linearize x-fastest into warps
+    (``lin = x + dim.x * (y + dim.y * z)``) and blocks linearize the
+    same way into the grid walk; the per-axis intrinsics are cheap
+    decompositions of the linear id against these static extents."""
+    x: int
+    y: int = 1
+    z: int = 1
+
+    @property
+    def total(self) -> int:
+        return self.x * self.y * self.z
+
+    def astuple(self) -> tuple:
+        return (self.x, self.y, self.z)
+
+    def __repr__(self):
+        return f"dim3({self.x}, {self.y}, {self.z})"
+
+
+def as_dim3(v, what: str = "launch dimension") -> Dim3:
+    """Normalize ``int | (x,) | (x, y) | (x, y, z) | Dim3`` to one
+    canonical :class:`Dim3` (missing axes are 1, CUDA's default)."""
+    if isinstance(v, Dim3):
+        d = v
+    elif isinstance(v, (int, np.integer)) and not isinstance(v, bool):
+        d = Dim3(int(v))
+    elif isinstance(v, (tuple, list)):
+        if not 1 <= len(v) <= 3:
+            raise ValueError(f"{what} must have 1-3 components, got {v!r}")
+        if not all(isinstance(c, (int, np.integer)) and not isinstance(c, bool)
+                   for c in v):
+            raise TypeError(f"{what} components must be ints, got {v!r}")
+        d = Dim3(*(int(c) for c in v))
+    else:
+        raise TypeError(f"{what} must be an int or a 1-3 tuple of ints, "
+                        f"got {type(v).__name__}")
+    if d.x <= 0 or d.y <= 0 or d.z <= 0:
+        raise ValueError(f"{what} components must be positive, got {d}")
+    return d
+
+
+def dim3_tuple(v) -> Optional[tuple]:
+    """Normalize a Dim3 / tuple / None to a static (x, y, z) int tuple
+    (None passes through: 'no geometry — treat as 1-D linear')."""
+    if v is None:
+        return None
+    if isinstance(v, Dim3):
+        return v.astuple()
+    t = tuple(int(c) for c in v)
+    return t + (1,) * (3 - len(t))
+
+
+def check_launch_geometry(grid: Dim3, block: Dim3):
+    """Enforce CUDA's launch limits on a normalized dim3 pair."""
+    for ax, extent, cap in zip("xyz", block.astuple(), CUDA_MAX_BLOCK):
+        if extent > cap:
+            raise CoxUnsupported(
+                f"CUDA blocks are limited to {cap} threads along "
+                f"{ax} (got block.{ax}={extent})")
+    if block.total > CUDA_MAX_BLOCK_THREADS:
+        raise CoxUnsupported(
+            f"CUDA blocks are limited to {CUDA_MAX_BLOCK_THREADS} threads "
+            f"(got {block} = {block.total})")
+    for ax, extent, cap in zip("xyz", grid.astuple(), CUDA_MAX_GRID):
+        if extent > cap:
+            raise CoxUnsupported(
+                f"CUDA grids are limited to {cap} blocks along "
+                f"{ax} (got grid.{ax}={extent})")
 
 
 class BarrierLevel(enum.Enum):
