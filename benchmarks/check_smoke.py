@@ -1,0 +1,97 @@
+"""CI regression gate for the bench-smoke job.
+
+The backend_sweep section of ``benchmarks/run.py`` asserts every
+(backend, warp_exec[, simd]) cell's output equals scan/serial in-process,
+so a broken executor path crashes the run.  This gate closes the
+remaining hole — a sweep that silently *covered less than it used to* —
+by diffing the smoke output against the committed baseline
+(``BENCH_PR3.json``) structurally:
+
+* both files carry the same schema tag;
+* every smoke-pick kernel produced a sweep entry (none skipped or lost
+  to an import/registration regression), and those kernels also exist
+  in the committed baseline (the perf trajectory stays comparable);
+* every entry has the full single-device cell set (scan/vmap ×
+  serial/batched, plus the w/o-AVX cells for warp-feature kernels) with
+  sane timings.
+
+Usage: ``python benchmarks/check_smoke.py BENCH_SMOKE.json BENCH_PR3.json``
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.run import SWEEP_SMOKE_PICKS  # noqa: E402
+
+REQUIRED_CELLS = ("scan_serial", "scan_batched", "vmap_serial", "vmap_batched")
+NOAVX_CELLS = ("scan_serial_noavx", "scan_batched_noavx")
+
+
+def fail(msg: str) -> None:
+    print(f"check_smoke: FAIL — {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot read {path}: {e}")
+        raise AssertionError  # unreachable
+
+
+def main(argv: list[str]) -> None:
+    if len(argv) != 3:
+        fail("usage: check_smoke.py <smoke.json> <baseline.json>")
+    smoke, baseline = load(argv[1]), load(argv[2])
+
+    if smoke.get("schema") != baseline.get("schema"):
+        fail(
+            f"schema mismatch: smoke={smoke.get('schema')!r} "
+            f"baseline={baseline.get('schema')!r}"
+        )
+    if "backend_sweep" not in smoke.get("sections", []):
+        fail(f"smoke run missed the backend_sweep section: {smoke.get('sections')}")
+
+    smoke_entries = {e["kernel"]: e for e in smoke.get("backend_sweep", [])}
+    base_kernels = {e["kernel"] for e in baseline.get("backend_sweep", [])}
+
+    missing = [k for k in SWEEP_SMOKE_PICKS if k not in smoke_entries]
+    if missing:
+        fail(f"smoke sweep lost kernels {missing} (present: {sorted(smoke_entries)})")
+    gone_from_base = [k for k in SWEEP_SMOKE_PICKS if k not in base_kernels]
+    if gone_from_base:
+        fail(
+            f"kernels {gone_from_base} absent from the committed baseline — "
+            f"regenerate BENCH_PR3.json (python benchmarks/run.py "
+            f"--sections backend_sweep --json BENCH_PR3.json)"
+        )
+
+    row_names = {r["name"] for r in smoke.get("rows", [])}
+    for kernel in SWEEP_SMOKE_PICKS:
+        entry = smoke_entries[kernel]
+        cells = entry.get("times_us", {})
+        need = list(REQUIRED_CELLS)
+        if any(c in cells for c in NOAVX_CELLS):
+            need += list(NOAVX_CELLS)
+        for cell in need:
+            t = cells.get(cell)
+            if not isinstance(t, (int, float)) or t <= 0:
+                fail(f"{kernel}: cell {cell!r} missing or non-positive ({t!r})")
+        if f"backend_sweep.{kernel}" not in row_names:
+            fail(f"{kernel}: CSV row missing from the smoke output")
+
+    print(
+        f"check_smoke: OK — {len(SWEEP_SMOKE_PICKS)} kernels × "
+        f"{len(REQUIRED_CELLS)}+ cells present; equality asserts ran in-process"
+    )
+
+
+if __name__ == "__main__":
+    main(sys.argv)

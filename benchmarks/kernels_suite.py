@@ -19,7 +19,6 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from repro.core import cox
-from repro.core.types import CoxUnsupported
 
 
 @dataclasses.dataclass
@@ -164,7 +163,6 @@ def _mm_args():
 
 
 def _mm_check(out):
-    n = 64
     a, b = _MM_CACHE
     return np.allclose(out["out"], a @ b, atol=1e-3)
 
@@ -503,6 +501,59 @@ def _wps_args():
 _reg_extra("warpPrefixStats", "warp-cg", warpPrefixStats, 32, 256, _wps_args)
 
 
+@cox.kernel
+def gridReduce(c, total: cox.Array(cox.f32), partial: cox.Array(cox.f32),
+               data: cox.Array(cox.f32), n: cox.i32):
+    # cooperative two-pass grid-wide reduction (the SDK's
+    # reduceSinglePassMultiBlockCG shape): every block tree-reduces its
+    # tile into partial[bid], the grid synchronizes, block 0 totals the
+    # partials — no host round-trip between the passes.  The paper's
+    # Table 1 marks this feature class ✗ for COX; our phase-split
+    # grid_sync (repro.core.phases) runs it.
+    tile = c.shared((128,), cox.f32)
+    tid = c.thread_idx()
+    i = c.block_idx() * c.block_dim() + tid
+    tile[tid] = data[i] if i < n else 0.0
+    c.syncthreads()
+    s = 64
+    while s > 0:
+        if tid < s:
+            tile[tid] = tile[tid] + tile[tid + s]
+        c.syncthreads()
+        s = s // 2
+    if tid == 0:
+        partial[c.block_idx()] = tile[0]
+    c.grid_sync()
+    if c.block_idx() == 0:
+        acc = 0.0
+        j = tid
+        while j < c.grid_dim():
+            acc = acc + partial[j]
+            j = j + c.block_dim()
+        tile[tid] = acc
+        c.syncthreads()
+        s2 = 64
+        while s2 > 0:
+            if tid < s2:
+                tile[tid] = tile[tid] + tile[tid + s2]
+            c.syncthreads()
+            s2 = s2 // 2
+        if tid == 0:
+            total[0] = tile[0]
+
+
+def _gr_args():
+    # small integers: every float add is exact in any association order,
+    # so scan/vmap/sharded × serial/batched agree bitwise with the oracle
+    n = 1000
+    data = RNG.integers(-8, 9, size=n).astype(np.float32)
+    return (np.zeros(1, np.float32), np.zeros(8, np.float32), data, n)
+
+
+_reg_extra("gridReduce", "grid-sync", gridReduce, 8, 128, _gr_args,
+           lambda out: out["total"][0] == out["partial"].sum())
+
+
 # ---------------------------------------------------------------------------
 # dim3 kernels: the 2-D geometry the SDK actually ships (matrixMul above
 # runs <<<dim3(4,4), dim3(16,16)>>>), plus the hand-flattened 1-D matmul
@@ -614,8 +665,10 @@ def _unsupported(name, features, reason):
 
 
 _unsupported("gpuConjugateGradient", "grid-sync",
-             "grid-wide sync needs runtime thread scheduling "
-             "(paper §5.1: unsupported in COX too)")
+             "grid sync inside the CG iteration loop: dynamic phase "
+             "count (phase-split grid_sync covers top-level syncs "
+             "only — see gridReduce; paper §5.1: fully unsupported "
+             "in COX)")
 _unsupported("multiGpuConjugateGradient", "multi-grid-sync",
              "multi-grid sync across devices (paper: unsupported)")
 _unsupported("filter_arr", "dynamic-cg",

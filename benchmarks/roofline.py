@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, List
+from typing import Any, Dict
 
 PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
 HBM_BW = 819e9           # bytes/s / chip

@@ -43,6 +43,15 @@ SMOKE = False
 RESULTS = []        # every CSV row, as dicts
 SWEEP_RESULTS = []  # structured backend_sweep matrix
 
+# backend_sweep kernel picks — module-level so the CI regression gate
+# (benchmarks/check_smoke.py) can assert the smoke run covered them
+SWEEP_SMOKE_PICKS = ("MatrixMulCUDA", "matrixMul1D", "transpose",
+                     "warpPrefixStats", "blockCounter", "gridReduce")
+SWEEP_FULL_PICKS = ("vectorAdd", "MatrixMulCUDA", "matrixMul1D",
+                    "transpose", "stencil2d", "reduce0", "reduce4",
+                    "histogram64", "blockCounter", "saxpyHeavy",
+                    "warpPrefixStats", "gridReduce")
+
 
 def _time_call(fn, *args, warmup=None, iters=None):
     for _ in range(WARMUP if warmup is None else warmup):
@@ -228,12 +237,7 @@ def backend_sweep():
         mesh = jax.make_mesh((len(jax.devices()),), ("data",))
         backends.append("sharded")
 
-    picks = ("MatrixMulCUDA", "matrixMul1D", "transpose",
-             "warpPrefixStats", "blockCounter") if SMOKE \
-        else ("vectorAdd", "MatrixMulCUDA", "matrixMul1D", "transpose",
-              "stencil2d", "reduce0", "reduce4",
-              "histogram64", "blockCounter", "saxpyHeavy",
-              "warpPrefixStats")
+    picks = SWEEP_SMOKE_PICKS if SMOKE else SWEEP_FULL_PICKS
     for sk in all_kernels():
         if sk.name not in picks:
             continue

@@ -28,7 +28,7 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

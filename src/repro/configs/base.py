@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax.numpy as jnp
 

@@ -14,14 +14,13 @@
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Sequence
 
 from . import flat as _flat
 from . import kernel_ir as K
 from . import runtime as _runtime
 from .execute import CompiledKernel, compile_kernel
-from .frontend import Array, parse_kernel
+from .frontend import Array, parse_kernel  # noqa: F401  (cox.Array re-export)
 from .types import (CoxUnsupported, DType, Dim3, WARP_SIZE,  # noqa: F401
                     as_dim3)  # Dim3 re-exported: cox.Dim3 launch geometry
 
@@ -106,7 +105,10 @@ class KernelFn:
         rl = _runtime.resolve_launch(ck, grid=grid, block=block3, mode=mode,
                                      backend=backend, warp_exec=warp_exec,
                                      mesh=mesh)
-        key = (token, rl.backend, rl.mode, rl.grid.astuple(),
+        # n_phases is derivable from the compile token but spelled out so
+        # cooperative (grid-sync) staging can never collide with a
+        # single-phase executable of the same geometry
+        key = (token, ck.n_phases, rl.backend, rl.mode, rl.grid.astuple(),
                rl.block.astuple(), rl.n_warps, simd, chunk, rl.warp_exec,
                _mesh_key(mesh), axis)
         cached = self._launch_cache.get(key)

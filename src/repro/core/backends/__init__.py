@@ -17,7 +17,7 @@ name to its module.
 """
 from __future__ import annotations
 
-from . import block_vmap, merge, scan, sharded
+from . import block_vmap, scan, sharded
 from .plan import LaunchPlan  # noqa: F401
 
 BACKENDS = {

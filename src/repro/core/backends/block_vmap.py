@@ -67,9 +67,34 @@ def run_chunked(plan: LaunchPlan, block_fn, bid_chunks, globals_,
     return g, m, d
 
 
+def run_phase_wave(plan: LaunchPlan, fn, bids, globals_, scalars, state,
+                   *, fold_deltas: bool):
+    """One cooperative phase as a single all-resident ``jax.vmap`` wave
+    over ``bids`` (the plan pins ``chunk == grid``, so there is exactly
+    one wave — CUDA's cooperative-launch residency rule).  Per-block
+    carried state rides the batch axis; -1 pad slots (sharded backend's
+    idle lanes) get their masks/deltas zeroed exactly like
+    :func:`run_chunked`'s pad handling.  Returns
+    ``(globals, wrote_masks, delta_sums, state)`` with masks/deltas
+    merged over the wave (``fold_deltas=True`` applies them in-line)."""
+    u = plan.uniforms(bids, scalars)
+    u_axes = {k: (0 if k == "bid" else None) for k in u}
+    g2, m2, d2, st2 = jax.vmap(
+        lambda uu, gg, ss: fn(uu, gg, state=ss),
+        in_axes=(u_axes, None, 0))(u, globals_, state)
+    valid = (bids >= 0)[:, None]
+    m2 = {k: v & valid for k, v in m2.items()}
+    d2 = {k: jnp.where(valid, v, 0) for k, v in d2.items()}
+    g, wrote, dsum = merge.merge_chunk(globals_, g2, m2, d2,
+                                       fold_deltas=fold_deltas)
+    return g, wrote, dsum, st2
+
+
 def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
     """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher."""
     plan.check_mergeable(name)
+    if plan.n_phases > 1:
+        return _build_phased(plan)
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
                              simd=plan.simd, track_writes=True,
                              warp_exec=plan.warp_exec,
@@ -79,6 +104,24 @@ def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
     def run(globals_, scalars):
         g, _, _ = run_chunked(plan, block_fn, bid_chunks, globals_, scalars,
                               fold_deltas=True)
+        return g
+
+    return jax.jit(run)
+
+
+def _build_phased(plan: LaunchPlan):
+    """Cooperative launch: one all-resident vmap wave per phase, globals
+    merged (single-writer select + summed atomic deltas) at every phase
+    boundary so phase *p+1* observes all of phase *p*'s writes."""
+    fns = plan.block_fns(track_writes=True)
+    bids = jnp.arange(plan.grid, dtype=jnp.int32)
+
+    def run(globals_, scalars):
+        g = globals_
+        state = plan.init_persist()
+        for fn in fns:
+            g, _, _, state = run_phase_wave(plan, fn, bids, g, scalars,
+                                            state, fold_deltas=True)
         return g
 
     return jax.jit(run)

@@ -15,9 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import kernel_ir as K
-from ..execute import CompiledKernel, walk_instrs
-from ..types import (ArraySpec, CoxUnsupported, Dim3, as_dim3,
-                     check_launch_geometry)
+from ..execute import CompiledKernel, make_block_fn, walk_instrs
+from ..types import (COOP_MAX_RESIDENT_BLOCKS, ArraySpec, CoxUnsupported,
+                     Dim3, DType, as_dim3, check_launch_geometry)
 
 DEFAULT_CHUNK = 8  # blocks run simultaneously per vmap step
 
@@ -44,6 +44,7 @@ class LaunchPlan:
     warp_exec: str = "serial"  # 'serial' | 'batched' (resolved, never 'auto')
     grid_dim: Optional[Dim3] = None   # canonical dim3 (set by build)
     block_dim: Optional[Dim3] = None
+    n_phases: int = 1          # >1 → cooperative (grid_sync) launch
 
     @classmethod
     def build(cls, ck: CompiledKernel, *, grid, block,
@@ -64,6 +65,27 @@ class LaunchPlan:
                              f"{warp_exec!r} (flat.choose_warp_exec "
                              f"resolves 'auto')")
         n_warps = -(-block // ck.warp_size)
+        n_phases = ck.n_phases
+        if n_phases > 1:
+            # CUDA's cooperative-launch constraint: every block resident
+            # per phase.  The chunk schedule may not split the grid —
+            # each block's carried state (locals + shared memory) must
+            # stay live across the whole phase sequence.
+            if grid > COOP_MAX_RESIDENT_BLOCKS:
+                raise CoxUnsupported(
+                    f"cooperative launch of '{ck.kernel.name}': "
+                    f"grid={grid} blocks exceeds the resident capacity "
+                    f"({COOP_MAX_RESIDENT_BLOCKS}) — every block must be "
+                    f"resident per phase for a grid barrier, exactly "
+                    f"cudaLaunchCooperativeKernel's occupancy rule")
+            if chunk is not None and int(chunk) < grid:
+                raise CoxUnsupported(
+                    f"cooperative launch of '{ck.kernel.name}': "
+                    f"chunk={chunk} would split the grid into waves, but "
+                    f"a grid barrier needs every block resident per "
+                    f"phase — drop chunk= (the plan schedules all "
+                    f"{grid} blocks as one wave)")
+            chunk = grid
         if chunk is None:
             chunk = min(grid, DEFAULT_CHUNK)
         chunk = max(1, min(int(chunk), grid))
@@ -71,7 +93,8 @@ class LaunchPlan:
         plan = cls(ck, grid, block, n_warps, mode, simd, chunk,
                    has_atomics=bool(atomics),
                    captures_atomic_old=any(s.dst for s in atomics),
-                   warp_exec=warp_exec, grid_dim=grid3, block_dim=block3)
+                   warp_exec=warp_exec, grid_dim=grid3, block_dim=block3,
+                   n_phases=n_phases)
         plan.check_warp_batchable()
         return plan
 
@@ -104,6 +127,43 @@ class LaunchPlan:
                 f"backend's delta merge cannot reproduce — launch "
                 f"without a mesh and use backend='scan' (the "
                 f"single-device 'auto' heuristic picks it)")
+
+    # ---------------- phase staging (cooperative grid sync) ----------------
+
+    def persist_spec(self) -> Optional[Tuple[Tuple[str, ...],
+                                             Tuple[str, ...]]]:
+        """The per-block state a phase executable must thread through:
+        ``(carried local names, shared-memory names)`` — or ``None`` for
+        single-phase launches (no state, the pre-phase program)."""
+        if self.n_phases == 1:
+            return None
+        return (tuple(self.ck.carried),
+                tuple(s.name for s in self.ck.kernel.shared))
+
+    def block_fns(self, *, track_writes: bool):
+        """One compiled block function per phase (a single-entry list
+        for ordinary kernels), all built with identical launch knobs."""
+        persist = self.persist_spec()
+        return [make_block_fn(sub, n_warps=self.n_warps, mode=self.mode,
+                              simd=self.simd, track_writes=track_writes,
+                              warp_exec=self.warp_exec,
+                              block_dim=self.block_dim,
+                              grid_dim=self.grid_dim, persist=persist)
+                for sub in self.ck.phase_list()]
+
+    def init_persist(self, n_blocks: Optional[int] = None):
+        """Phase-0 per-block state, stacked over ``n_blocks`` (default:
+        the whole grid): zeroed ``(n_blocks, n_warps, W)`` planes for
+        carried locals and zeroed flat shared buffers — the same initial
+        values a single-phase launch starts from."""
+        nb = self.grid if n_blocks is None else int(n_blocks)
+        W = self.ck.warp_size
+        bv = {v: jnp.zeros((nb, self.n_warps, W),
+                           self.ck.var_types.get(v, DType.f32).jnp)
+              for v in self.ck.carried}
+        sh = {s.name: jnp.zeros((nb, int(np.prod(s.shape))), s.dtype.jnp)
+              for s in self.ck.kernel.shared}
+        return {"bv": bv, "sh": sh}
 
     # ---------------- arg binding ----------------
 

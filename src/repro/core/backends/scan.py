@@ -5,6 +5,12 @@ observes every write of blocks *< i* (a legal schedule; CUDA guarantees
 nothing about cross-block ordering between grid-wide syncs).  Minimal
 memory (one copy of global memory), zero merge cost, but the grid is
 fully serialized from XLA's point of view.
+
+Cooperative (grid-sync) launches run one scan per phase: the scan's
+carry holds global memory (phase *p+1* blocks observe every phase-*p*
+write — the grid barrier's guarantee) while each block's persistent
+state (carried locals + shared memory) rides the scan's per-step
+xs/ys — sliced in by block id, stacked back out.
 """
 from __future__ import annotations
 
@@ -20,6 +26,8 @@ name = "scan"
 
 def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
     """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher."""
+    if plan.n_phases > 1:
+        return _build_phased(plan)
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
                              simd=plan.simd, warp_exec=plan.warp_exec,
                              block_dim=plan.block_dim, grid_dim=plan.grid_dim)
@@ -31,6 +39,26 @@ def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
 
         g, _ = lax.scan(step, globals_,
                         jnp.arange(plan.grid, dtype=jnp.int32))
+        return g
+
+    return jax.jit(run)
+
+
+def _build_phased(plan: LaunchPlan):
+    fns = plan.block_fns(track_writes=False)
+    bids = jnp.arange(plan.grid, dtype=jnp.int32)
+
+    def run(globals_, scalars):
+        g = globals_
+        state = plan.init_persist()
+        for fn in fns:
+            def step(carry, x, fn=fn):
+                bid, st = x
+                g2, _, _, st2 = fn(plan.uniforms(bid, scalars), carry,
+                                   state=st)
+                return g2, st2
+
+            g, state = lax.scan(step, g, (bids, state))
         return g
 
     return jax.jit(run)

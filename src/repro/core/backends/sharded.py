@@ -13,12 +13,13 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
 from ..execute import make_block_fn
 from . import merge
-from .block_vmap import run_chunked
+from .block_vmap import run_chunked, run_phase_wave
 from .plan import LaunchPlan
 
 name = "sharded"
@@ -29,6 +30,8 @@ def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
     if mesh is None:
         raise ValueError("the sharded backend needs a mesh")
     plan.check_mergeable(name)
+    if plan.n_phases > 1:
+        return _build_phased(plan, mesh, axis)
     ndev = mesh.shape[axis]
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
                              simd=plan.simd, track_writes=True,
@@ -43,6 +46,44 @@ def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
         g, masks, deltas = run_chunked(plan, block_fn, bid_chunks, g0,
                                        scalars, fold_deltas=False)
         return merge.cross_device_merge(g0, g, masks, deltas, axis)
+
+    fn = shard_map(device_fn, mesh=mesh,
+                   in_specs=(P(axis), P(), P()), out_specs=P(),
+                   check_vma=False)
+
+    def run(globals_, scalars):
+        return fn(bid_table, globals_, scalars)
+
+    return jax.jit(run)
+
+
+def _build_phased(plan: LaunchPlan, mesh, axis: str):
+    """Cooperative launch over a mesh: each device keeps its slice of
+    the grid resident across the whole phase sequence (per-block carried
+    state never leaves its device — blocks are pinned, the bid table is
+    identical every phase), and global memory is reconciled with the
+    masked-psum / delta-psum merge at **every phase boundary**, so a
+    phase-*p+1* block on one device observes phase-*p* writes made on
+    any other device — the grid barrier's guarantee."""
+    ndev = mesh.shape[axis]
+    fns = plan.block_fns(track_writes=True)
+    per = -(-plan.grid // ndev)
+    table = np.full((ndev, per), -1, np.int32)
+    flat = np.arange(plan.grid, dtype=np.int32)
+    for d in range(ndev):
+        mine = flat[d * per:(d + 1) * per]
+        table[d, :len(mine)] = mine
+    bid_table = jnp.asarray(table)
+
+    def device_fn(dev_bids, g0, scalars):
+        dev_bids = dev_bids.reshape(-1)        # this device's resident wave
+        g = g0
+        state = plan.init_persist(n_blocks=dev_bids.shape[0])
+        for fn in fns:
+            g2, wrote, dsum, state = run_phase_wave(
+                plan, fn, dev_bids, g, scalars, state, fold_deltas=False)
+            g = merge.cross_device_merge(g, g2, wrote, dsum, axis)
+        return g
 
     fn = shard_map(device_fn, mesh=mesh,
                    in_specs=(P(axis), P(), P()), out_specs=P(),

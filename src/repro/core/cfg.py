@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Set
 
 from . import kernel_ir as K
 from .types import BarrierLevel, CoxUnsupported

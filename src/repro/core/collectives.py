@@ -30,7 +30,6 @@ where such lanes simply do not exist.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -48,7 +48,6 @@ Warp execution (``warp_exec``, orthogonal to the mode):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
@@ -57,16 +56,15 @@ from jax import lax
 
 from . import collectives
 from . import kernel_ir as K
-from .cfg import CFG, Br, Jmp, Ret, WarpBufCompute, WarpBufStore
-from .frontend import parse_kernel
+from .cfg import CFG, WarpBufCompute, WarpBufStore
 from .lower import lower_kernel
 from .passes import (insert_extra_barriers, lower_warp_intrinsics,
                      split_blocks_at_barriers)
-from .regions import (EXIT, BlockPR, BlockPeel, Machine, WarpPR, WarpPeel,
-                      build_machine, replication_classes, warp_peel_count)
+from .regions import (EXIT, BlockPR, Machine, WarpPR, build_machine,
+                      replication_classes, warp_peel_count)
 from .typeinfer import infer
-from .types import (ArraySpec, BarrierLevel, CoxUnsupported, DType,
-                    ScalarSpec, SharedSpec, dim3_tuple)
+from .types import (ArraySpec, CoxUnsupported, DType, ScalarSpec,
+                    dim3_tuple)
 
 _UNROLL_LIMIT = 64  # static-trip predicated loops up to this are unrolled in jit mode
 
@@ -83,14 +81,34 @@ def _prod(shape) -> int:
 
 @dataclasses.dataclass
 class CompiledKernel:
-    """Result of the full pass pipeline, ready to stage into JAX."""
+    """Result of the full pass pipeline, ready to stage into JAX.
+
+    A kernel with grid-wide barriers (``c.grid_sync()``) compiles to a
+    *multi-phase* container: ``phases`` holds one ordinary single-phase
+    CompiledKernel per inter-sync program segment (``repro.core.phases``)
+    and ``cfg``/``machine``/``classes`` of the container itself are
+    unset — backends build one executable per phase and thread global
+    memory plus the ``carried`` per-block state between them.  Kernels
+    without a grid sync compile exactly as before (``phases == ()``).
+    """
     kernel: K.Kernel
-    cfg: CFG
-    machine: Machine
+    cfg: Optional[CFG]
+    machine: Optional[Machine]
     var_types: Dict[str, DType]
     classes: Dict[str, str]            # var -> 'block' | 'warp'
     warp_bufs: Dict[str, DType]
     warp_size: int
+    phases: Tuple["CompiledKernel", ...] = ()   # per-phase compilations
+    carried: Tuple[str, ...] = ()               # locals live across phases
+
+    @property
+    def n_phases(self) -> int:
+        return len(self.phases) or 1
+
+    def phase_list(self) -> Tuple["CompiledKernel", ...]:
+        """The executable phase sequence — ``(self,)`` for the ordinary
+        single-phase case."""
+        return self.phases or (self,)
 
     @property
     def array_params(self) -> List[ArraySpec]:
@@ -101,6 +119,11 @@ class CompiledKernel:
         return [p for p in self.kernel.params if isinstance(p, ScalarSpec)]
 
     def summary(self) -> str:
+        if self.phases:
+            inner = "; ".join(p.summary() for p in self.phases)
+            return (f"kernel {self.kernel.name}: {len(self.phases)} "
+                    f"grid-sync phases, {len(self.carried)} carried "
+                    f"locals [{inner}]")
         n_bpr = sum(isinstance(n, BlockPR) for n in self.machine.nodes)
         n_wpr = sum(
             sum(isinstance(w, WarpPR) for w in n.warp.nodes)
@@ -114,8 +137,32 @@ class CompiledKernel:
 
 
 def compile_kernel(kernel: K.Kernel, warp_size: int = 32) -> CompiledKernel:
-    """Run the hierarchical-collapsing pipeline (paper Fig. 4 steps 1-5)."""
-    var_types = infer(kernel)
+    """Run the hierarchical-collapsing pipeline (paper Fig. 4 steps 1-5).
+
+    Kernels using ``c.grid_sync()`` are phase-split first (see
+    ``repro.core.phases``): type inference runs once over the full
+    kernel so cross-phase locals agree, each phase runs the unchanged
+    pipeline, and locals live across phase boundaries are forced to the
+    'block' replication class in every phase so their ``(n_warps, W)``
+    planes can be carried between phase executables."""
+    from .phases import carried_locals, split_phases
+    phase_kernels = split_phases(kernel)
+    if len(phase_kernels) == 1:
+        return _compile_one(kernel, warp_size, infer(kernel), ())
+    var_types = infer(kernel)          # full-kernel: cross-phase var types
+    carried = tuple(sorted(carried_locals(kernel, phase_kernels)))
+    compiled = tuple(_compile_one(pk, warp_size, dict(var_types), carried)
+                     for pk in phase_kernels)
+    uniforms = {p.name for p in kernel.params if isinstance(p, ScalarSpec)}
+    vt = {v: t for v, t in var_types.items() if v not in uniforms}
+    return CompiledKernel(kernel, None, None, vt, {}, {}, warp_size,
+                          phases=compiled, carried=carried)
+
+
+def _compile_one(kernel: K.Kernel, warp_size: int,
+                 var_types: Dict[str, DType],
+                 force_block: Tuple[str, ...]) -> CompiledKernel:
+    """The single-phase pipeline (paper Fig. 4 steps 1-5)."""
     cfg = lower_kernel(kernel)
     warp_bufs = lower_warp_intrinsics(cfg, var_types)
     for b, dt in warp_bufs.items():
@@ -131,6 +178,9 @@ def compile_kernel(kernel: K.Kernel, warp_size: int = 32) -> CompiledKernel:
     # every var assigned anywhere must have a class; default to warp-local
     for v in var_types:
         classes.setdefault(v, "warp")
+    # cross-phase locals must live in the carried (n_warps, W) plane
+    for v in force_block:
+        classes[v] = "block"
     return CompiledKernel(kernel, cfg, machine, var_types, classes,
                           warp_bufs, warp_size)
 
@@ -792,10 +842,21 @@ def _try_linear(g) -> Optional[List[WarpPR]]:
 def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
                   simd: bool = True, track_writes: bool = False,
                   warp_exec: str = "serial",
-                  block_dim=None, grid_dim=None):
+                  block_dim=None, grid_dim=None,
+                  persist: Optional[Tuple[Tuple[str, ...],
+                                          Tuple[str, ...]]] = None):
     """Build ``f(uniforms, globals[, masks, deltas]) -> (globals, masks,
     deltas)`` executing one CUDA block.  ``uniforms`` must contain bid,
     bdim, gdim and every scalar kernel parameter.
+
+    ``persist=(var_names, shared_names)`` makes the block function one
+    *phase* of a cooperative (grid-sync) kernel: it takes an extra
+    ``state={"bv": {var: (n_warps, W)}, "sh": {name: flat}}`` argument
+    holding this block's carried locals and shared memory from the
+    previous phase (zeros for phase 0), and returns a fourth output with
+    their final values.  Carried vars are 'block'-class in every phase
+    (``compile_kernel`` forces this), so the state plugs straight into
+    the block-replicated plane.
 
     ``block_dim``/``grid_dim`` are the launch's static dim3 extents
     (Dim3 or tuple); they feed only the per-axis intrinsics — the
@@ -812,6 +873,10 @@ def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
     if warp_exec not in ("serial", "batched"):
         raise ValueError(f"unknown warp_exec {warp_exec!r}; "
                          f"expected 'serial' or 'batched'")
+    if ck.phases:
+        raise ValueError("make_block_fn runs one phase: pass a phase "
+                         "CompiledKernel (ck.phase_list()), not the "
+                         "multi-phase container")
     jit_mode = mode == "jit"
     W = ck.warp_size
     bdim3 = dim3_tuple(block_dim)
@@ -831,12 +896,18 @@ def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
                  if isinstance(n, BlockPR)} if batch_warps else {})
 
     def block_fn(uniforms: Dict[str, Any], globals_: Dict[str, Any],
-                 store_masks=None, atomic_deltas=None):
+                 store_masks=None, atomic_deltas=None, state=None):
         block_vars = {
             v: jnp.zeros((n_warps, W), ck.var_types.get(v, DType.f32).jnp)
             for v, c in ck.classes.items() if c == "block"}
         shmem = {s.name: jnp.zeros((_prod(s.shape),), s.dtype.jnp)
                  for s in ck.kernel.shared}
+        if persist is not None:
+            if state is None:
+                raise ValueError("persist block fn needs state= (carried "
+                                 "per-block locals + shared memory)")
+            block_vars.update({v: state["bv"][v] for v in persist[0]})
+            shmem.update({s: state["sh"][s] for s in persist[1]})
         if track_writes:
             store_masks = store_masks if store_masks is not None else {
                 k: jnp.zeros(v.shape, jnp.bool_) for k, v in globals_.items()}
@@ -981,13 +1052,19 @@ def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
             return succ[jnp.clip(ex, 0, len(node.succ_ids) - 1)] \
                 if node.succ_ids else jnp.int32(EXIT)
 
+        def outputs(g, sm, ad, bv, sh):
+            if persist is None:
+                return g, sm, ad
+            return g, sm, ad, {"bv": {v: bv[v] for v in persist[0]},
+                               "sh": {s: sh[s] for s in persist[1]}}
+
         nodes = ck.machine.nodes
         linear = _try_linear_block(ck.machine)
         if linear is not None:
             bv, sh, g, sm, ad = block_vars, shmem, globals_, store_masks, atomic_deltas
             for node in linear:
                 _, bv, sh, g, sm, ad = run_block_pr(node, bv, sh, g, sm, ad)
-            return g, sm, ad
+            return outputs(g, sm, ad, bv, sh)
 
         # general PC machine at block level
         def mk_fn(node):
@@ -1012,7 +1089,7 @@ def make_block_fn(ck: CompiledKernel, *, n_warps: int, mode: str = "jit",
             lambda s: s["pc"] != jnp.int32(EXIT),
             lambda s: lax.switch(jnp.clip(s["pc"], 0, len(fns) - 1), fns, s),
             st0)
-        return st["g"], st["sm"], st["ad"]
+        return outputs(st["g"], st["sm"], st["ad"], st["bv"], st["sh"])
 
     return block_fn
 
@@ -1034,18 +1111,20 @@ def _try_linear_block(machine: Machine) -> Optional[List[BlockPR]]:
 
 
 def walk_instrs(ck: CompiledKernel):
-    """Yield every instruction in the kernel, descending into If/While."""
+    """Yield every instruction in the kernel, descending into If/While
+    (and into every phase of a multi-phase compilation)."""
     return _all_instrs(ck)
 
 
 def _all_instrs(ck: CompiledKernel):
-    for blk in ck.cfg.blocks.values():
-        stack = list(blk.instrs)
-        while stack:
-            s = stack.pop()
-            yield s
-            if isinstance(s, K.If):
-                stack.extend(s.then_body)
-                stack.extend(s.else_body)
-            elif isinstance(s, K.While):
-                stack.extend(s.body)
+    for sub in ck.phase_list():
+        for blk in sub.cfg.blocks.values():
+            stack = list(blk.instrs)
+            while stack:
+                s = stack.pop()
+                yield s
+                if isinstance(s, K.If):
+                    stack.extend(s.then_body)
+                    stack.extend(s.else_body)
+                elif isinstance(s, K.While):
+                    stack.extend(s.body)

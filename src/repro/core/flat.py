@@ -121,6 +121,13 @@ def choose_backend(kernel: K.Kernel, *, grid: int, mesh=None,
         return "sharded"
     if grid <= 1 or captures_atomic_old(kernel):
         return "scan"
+    if K.uses_grid_sync(kernel):
+        # cooperative launches pin the chunk schedule to one all-resident
+        # wave and merge global memory at every phase boundary, so the
+        # vmap wave pays grid× copies of globals per phase; measured
+        # ~10x against the loop-carried scan on the sweep's gridReduce.
+        # Explicit backend='vmap'/mesh requests are still honored.
+        return "scan"
     blockwise_work = bool(kernel.shared) or \
         any(isinstance(s, K.AtomicRMW) for s in kernel.walk())
     return "vmap" if blockwise_work else "scan"
@@ -218,6 +225,10 @@ def choose_warp_exec(kernel: K.Kernel, *, n_warps: int,
         return "serial"
     if machine is not None:
         from .regions import warp_peel_count
-        if warp_peel_count(machine) > 0:
+        # a tuple/list means per-phase machines (cooperative grid-sync
+        # kernels): any peel-heavy phase keeps the whole launch serial
+        machines = (machine if isinstance(machine, (tuple, list))
+                    else (machine,))
+        if any(warp_peel_count(m) > 0 for m in machines):
             return "serial"
     return "batched"

@@ -30,8 +30,8 @@ import textwrap
 from typing import Any, Dict, List, Optional
 
 from . import kernel_ir as K
-from .types import (ArraySpec, BarrierLevel, CoxTypeError, CoxUnsupported,
-                    DType, ScalarSpec, SharedSpec)
+from .types import (ArraySpec, BarrierLevel, CoxUnsupported, DType,
+                    ScalarSpec, SharedSpec)
 
 
 # ----------------------------------------------------------------------------
@@ -254,10 +254,15 @@ class _Parser(ast.NodeVisitor):
             # is done by stmt-level handling, so reject for clarity.
             raise self.err(node, f"warp collective {attr}() must be the sole "
                                  f"RHS of an assignment (e.g. v = c.{attr}(...))")
-        if attr in ("coalesced_threads", "this_grid", "this_multi_grid"):
+        if attr == "this_grid":
+            raise self.err(
+                node, "this_grid() is only supported as a grid barrier — "
+                      "write c.this_grid().sync() (or c.grid_sync()) as a "
+                      "standalone statement")
+        if attr in ("coalesced_threads", "this_multi_grid"):
             raise CoxUnsupported(
                 f"dynamic cooperative group '{attr}' requires runtime thread "
-                f"scheduling (paper §2.2.3 — same gap as filter_arr/grid sync)")
+                f"scheduling (paper §2.2.3 — same gap as filter_arr)")
         raise self.err(node, f"unknown context intrinsic {attr}")
 
     # ---------------- statements ----------------
@@ -277,6 +282,18 @@ class _Parser(ast.NodeVisitor):
                 return [K.Barrier(BarrierLevel.BLOCK)]
             if attr == "syncwarp":
                 return [K.Barrier(BarrierLevel.WARP)]
+            if attr == "grid_sync":
+                return [K.Barrier(BarrierLevel.GRID)]
+            # cooperative-groups spelling: c.this_grid().sync()
+            if (isinstance(node.value, ast.Call)
+                    and isinstance(node.value.func, ast.Attribute)
+                    and node.value.func.attr == "sync"
+                    and self._is_ctx_call(node.value.func.value)
+                    == "this_grid"):
+                if node.value.args or node.value.keywords:
+                    raise self.err(node, "this_grid().sync() takes no "
+                                         "arguments")
+                return [K.Barrier(BarrierLevel.GRID)]
             if attr == "atomic_add":
                 a = node.value.args
                 arr = a[0].id if isinstance(a[0], ast.Name) else None

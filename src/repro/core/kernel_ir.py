@@ -284,10 +284,10 @@ def subtree_barrier_level(stmts: Sequence[Stmt]) -> Optional[BarrierLevel]:
     (peelable, per the paper's aligned-barrier assumption)."""
     level: Optional[BarrierLevel] = None
 
-    def up(l: BarrierLevel):
+    def up(lvl: BarrierLevel):
         nonlocal level
-        if level is None or (l == BarrierLevel.BLOCK):
-            level = l
+        if level is None or lvl.rank > level.rank:
+            level = lvl
 
     def rec(body):
         for s in body:
@@ -302,6 +302,14 @@ def subtree_barrier_level(stmts: Sequence[Stmt]) -> Optional[BarrierLevel]:
                 rec(s.body)
     rec(stmts)
     return level
+
+
+def uses_grid_sync(k: Kernel) -> bool:
+    """True when the kernel contains a grid-wide barrier (cooperative
+    ``this_grid().sync()``) — the signal that compilation must phase-split
+    (``repro.core.phases``) before the collapsing pipeline runs."""
+    return any(isinstance(s, Barrier) and s.level == BarrierLevel.GRID
+               for s in k.walk())
 
 
 def uses_warp_features(k: Kernel) -> bool:

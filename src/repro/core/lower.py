@@ -22,11 +22,11 @@ guarantees the paper (§3.3.2/§3.3.3).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import List
 
 from . import kernel_ir as K
 from .cfg import CFG, Block, Br, Jmp, Ret
-from .types import BarrierLevel, CoxUnsupported, DType
+from .types import BarrierLevel, CoxUnsupported
 
 
 class _Lowerer:
@@ -59,6 +59,15 @@ class _Lowerer:
             if cur.term is not None:
                 # unreachable code after a Return
                 raise CoxUnsupported("statements after return are unreachable")
+            if isinstance(s, K.Barrier) and s.level == BarrierLevel.GRID:
+                # the region machine may not collapse across a grid
+                # barrier: compile_kernel phase-splits (repro.core.phases)
+                # before lowering, so one reaching the CFG is a misuse of
+                # the low-level API
+                raise CoxUnsupported(
+                    "grid barrier reached CFG lowering: grid_sync kernels "
+                    "must be phase-split first (compile via "
+                    "repro.core.execute.compile_kernel, which handles it)")
             if isinstance(s, K.Return):
                 if i != len(stmts) - 1:
                     raise CoxUnsupported("return must be the last statement")
@@ -76,6 +85,11 @@ class _Lowerer:
     # ------------------------------------------------------------------
     def lower_if(self, s: K.If, cur: Block) -> Block:
         level = K.subtree_barrier_level(s.then_body + s.else_body)
+        if level == BarrierLevel.GRID:
+            raise CoxUnsupported(
+                "grid_sync inside divergent control flow — a grid barrier "
+                "must be reached uniformly by the whole grid (see "
+                "repro.core.phases.validate_grid_syncs)")
         if level is None:
             self._check_predicable(s.then_body)
             self._check_predicable(s.else_body)
@@ -106,6 +120,10 @@ class _Lowerer:
     # ------------------------------------------------------------------
     def lower_while(self, s: K.While, cur: Block) -> Block:
         level = K.subtree_barrier_level(s.body)
+        if level == BarrierLevel.GRID:
+            raise CoxUnsupported(
+                "grid_sync inside a loop body — the phase count must be "
+                "static (see repro.core.phases.validate_grid_syncs)")
         if level is None:
             self._check_predicable(s.body)
             cur.instrs.append(s)  # masked loop, executed in-place

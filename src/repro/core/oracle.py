@@ -20,13 +20,13 @@ required by post-Volta CUDA anyway.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from . import kernel_ir as K
 from .types import (ArraySpec, BarrierLevel, CoxUnsupported, DType,
-                    ScalarSpec, dim3_tuple)
+                    dim3_tuple)
 
 
 class OracleMisaligned(Exception):
@@ -238,56 +238,56 @@ def _collective(func: str, lanes: List[int], vals: Dict[int, Any],
     """lanes: lane ids (within warp) present; returns result per lane."""
     out: Dict[int, Any] = {}
     segs: Dict[int, List[int]] = {}
-    for l in lanes:
-        segs.setdefault(l // width, []).append(l)
+    for ln in lanes:
+        segs.setdefault(ln // width, []).append(ln)
     for seg_lanes in segs.values():
         seg_set = set(seg_lanes)
         base = (seg_lanes[0] // width) * width
         if func == "vote_all":
-            r = all(bool(vals[l]) for l in seg_lanes)
-            for l in seg_lanes:
-                out[l] = r
+            r = all(bool(vals[ln]) for ln in seg_lanes)
+            for ln in seg_lanes:
+                out[ln] = r
         elif func == "vote_any":
-            r = any(bool(vals[l]) for l in seg_lanes)
-            for l in seg_lanes:
-                out[l] = r
+            r = any(bool(vals[ln]) for ln in seg_lanes)
+            for ln in seg_lanes:
+                out[ln] = r
         elif func == "ballot":
             r = 0
-            for l in seg_lanes:
-                if bool(vals[l]):
-                    r |= 1 << (l - base)
-            for l in seg_lanes:
-                out[l] = r
+            for ln in seg_lanes:
+                if bool(vals[ln]):
+                    r |= 1 << (ln - base)
+            for ln in seg_lanes:
+                out[ln] = r
         elif func == "red_add":
-            r = sum(vals[l] for l in seg_lanes)
-            for l in seg_lanes:
-                out[l] = r
+            r = sum(vals[ln] for ln in seg_lanes)
+            for ln in seg_lanes:
+                out[ln] = r
         elif func == "red_max":
-            r = max(vals[l] for l in seg_lanes)
-            for l in seg_lanes:
-                out[l] = r
+            r = max(vals[ln] for ln in seg_lanes)
+            for ln in seg_lanes:
+                out[ln] = r
         elif func == "red_min":
-            r = min(vals[l] for l in seg_lanes)
-            for l in seg_lanes:
-                out[l] = r
+            r = min(vals[ln] for ln in seg_lanes)
+            for ln in seg_lanes:
+                out[ln] = r
         elif func == "shfl_down":
-            for l in seg_lanes:
-                src = l + int(extras[l][0])
-                out[l] = vals[src] if (src - base) < width and src in seg_set \
-                    else vals[l]
+            for ln in seg_lanes:
+                src = ln + int(extras[ln][0])
+                out[ln] = vals[src] if (src - base) < width and src in seg_set \
+                    else vals[ln]
         elif func == "shfl_up":
-            for l in seg_lanes:
-                src = l - int(extras[l][0])
-                out[l] = vals[src] if (src - base) >= 0 and src in seg_set \
-                    else vals[l]
+            for ln in seg_lanes:
+                src = ln - int(extras[ln][0])
+                out[ln] = vals[src] if (src - base) >= 0 and src in seg_set \
+                    else vals[ln]
         elif func == "shfl_xor":
-            for l in seg_lanes:
-                src = l ^ int(extras[l][0])
-                out[l] = vals[src] if src in seg_set else vals[l]
+            for ln in seg_lanes:
+                src = ln ^ int(extras[ln][0])
+                out[ln] = vals[src] if src in seg_set else vals[ln]
         elif func == "shfl_idx":
-            for l in seg_lanes:
-                src = base + (int(extras[l][0]) % width)
-                out[l] = vals[src] if src in seg_set else vals[l]
+            for ln in seg_lanes:
+                src = base + (int(extras[ln][0]) % width)
+                out[ln] = vals[src] if src in seg_set else vals[ln]
         else:
             raise CoxUnsupported(f"oracle collective {func}")
     return out
@@ -301,17 +301,27 @@ def _collective(func: str, lanes: List[int], vals: Dict[int, Any],
 def run_block(kernel: K.Kernel, *, bid: int, block: int, grid: int,
               warp_size: int, scalars: Dict[str, Any],
               globals_: Dict[str, np.ndarray], var_types: Dict[str, DType],
-              block_dim=None, grid_dim=None):
+              block_dim=None, grid_dim=None, state: Optional[dict] = None):
+    """Run one block to completion.  ``state`` carries the block's
+    persistent context across cooperative grid-sync phases: per-thread
+    local variables (CUDA: registers live for the thread's lifetime) and
+    shared memory (lives for the block's lifetime).  Returns the state
+    for the next phase."""
     uniforms = {"bid": bid, "bdim": block, "gdim": grid,
                 "bdim3": dim3_tuple(block_dim) or (block, 1, 1),
                 "gdim3": dim3_tuple(grid_dim) or (grid, 1, 1)}
     uniforms.update(scalars)
-    shmem = {s.name: np.zeros(int(np.prod(s.shape)), _np(s.dtype))
-             for s in kernel.shared}
+    shmem = (state["shmem"] if state is not None else
+             {s.name: np.zeros(int(np.prod(s.shape)), _np(s.dtype))
+              for s in kernel.shared})
     gens = []
+    threads = []
     for tid in range(block):
         th = _Thread(kernel, tid, warp_size, uniforms, globals_, shmem,
                      var_types)
+        if state is not None:
+            th.vars = dict(state["vars"][tid])
+        threads.append(th)
         gens.append(th.run())
 
     event: List[Optional[tuple]] = [None] * block
@@ -338,7 +348,7 @@ def run_block(kernel: K.Kernel, *, bid: int, block: int, grid: int,
     n_warps = -(-block // warp_size)
     for _ in range(10_000_000):
         if all(done):
-            return
+            return {"vars": [th.vars for th in threads], "shmem": shmem}
         progressed = False
         # 1) release any warp whose live lanes all sit at the same warp event
         for w in range(n_warps):
@@ -400,12 +410,20 @@ def run_grid(kernel: K.Kernel, *, grid, block, args: Sequence[Any],
              warp_size: int = 32) -> Dict[str, np.ndarray]:
     """Reference execution of kernel<<<grid, block>>>(*args); ``grid``
     and ``block`` accept ``int | (x, y[, z])`` dim3 geometry (threads
-    linearize x-fastest into warps, blocks into the grid walk)."""
+    linearize x-fastest into warps, blocks into the grid walk).
+
+    Cooperative kernels (``this_grid().sync()``) run with the same phase
+    split the compiler uses (``repro.core.phases``): all blocks complete
+    phase *p* before any block starts phase *p+1* — the grid barrier's
+    guarantee — with each block's per-thread locals and shared memory
+    persisting across phases."""
+    from .phases import split_phases
     from .typeinfer import infer
     from .types import as_dim3
     grid3 = as_dim3(grid, "grid")
     block3 = as_dim3(block, "block")
     var_types = infer(kernel)
+    phase_kernels = split_phases(kernel)
     globals_: Dict[str, np.ndarray] = {}
     shapes: Dict[str, tuple] = {}
     scalars: Dict[str, Any] = {}
@@ -416,8 +434,12 @@ def run_grid(kernel: K.Kernel, *, grid, block, args: Sequence[Any],
             globals_[spec.name] = a.reshape(-1).copy()
         else:
             scalars[spec.name] = _np(spec.dtype)(val)
-    for bid in range(grid3.total):
-        run_block(kernel, bid=bid, block=block3.total, grid=grid3.total,
-                  warp_size=warp_size, scalars=scalars, globals_=globals_,
-                  var_types=var_types, block_dim=block3, grid_dim=grid3)
+    states: List[Optional[dict]] = [None] * grid3.total
+    for pk in phase_kernels:
+        for bid in range(grid3.total):
+            states[bid] = run_block(
+                pk, bid=bid, block=block3.total, grid=grid3.total,
+                warp_size=warp_size, scalars=scalars, globals_=globals_,
+                var_types=var_types, block_dim=block3, grid_dim=grid3,
+                state=states[bid])
     return {k: v.reshape(shapes[k]) for k, v in globals_.items()}

@@ -15,7 +15,7 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Set, Tuple
 
 from . import kernel_ir as K
-from .cfg import CFG, Block, Br, Jmp, Ret, WarpBufCompute, WarpBufStore
+from .cfg import CFG, Block, Br, WarpBufCompute, WarpBufStore
 from .types import BarrierLevel, CoxUnsupported, DType
 
 # ----------------------------------------------------------------------------
@@ -70,7 +70,7 @@ def _block_barrier_level(blk: Block) -> Optional[BarrierLevel]:
     lvl: Optional[BarrierLevel] = None
     for i in blk.instrs:
         if isinstance(i, K.Barrier):
-            if lvl is None or i.level == BarrierLevel.BLOCK:
+            if lvl is None or i.level.rank > lvl.rank:
                 lvl = i.level
     return lvl
 
@@ -222,7 +222,7 @@ def find_parallel_regions_alg2(cfg: CFG, level: BarrierLevel) -> List[frozenset]
         lvl = _block_barrier_level(blk)
         if lvl is None:
             return False
-        return True if level == BarrierLevel.WARP else lvl == BarrierLevel.BLOCK
+        return True if level == BarrierLevel.WARP else lvl >= BarrierLevel.BLOCK
 
     pr_set: List[frozenset] = []
     end_blocks = [n for n, b in cfg.blocks.items() if is_end_block(b)]

@@ -128,7 +128,10 @@ def _ends_with_barrier(blk: Block, level: BarrierLevel) -> bool:
         return False
     if level == BarrierLevel.WARP:
         return True  # any barrier ends a warp-level PR
-    return blk.instrs[-1].level == BarrierLevel.BLOCK
+    # block-level cut: block barriers and anything wider (a grid barrier
+    # may never be collapsed across — defensive; compile_kernel splits
+    # phases before a GRID barrier can reach the region machine)
+    return blk.instrs[-1].level >= BarrierLevel.BLOCK
 
 
 def _components(cfg: CFG, members: Set[str], cut_level: BarrierLevel,
@@ -162,7 +165,6 @@ def build_machine(cfg: CFG) -> Machine:
                    if b.is_pure_branch() and b.term.level == BarrierLevel.BLOCK}
     comp = _components(cfg, all_blocks, BarrierLevel.BLOCK, block_peels)
 
-    n_comps = (max(comp.values()) + 1) if comp else 0
     nodes: List[object] = []
     comp_node: Dict[int, BlockPR] = {}
     peel_node: Dict[str, BlockPeel] = {}

@@ -32,7 +32,8 @@ from . import backends as _backends
 from . import flat as _flat
 from .backends.plan import LaunchPlan
 from .execute import CompiledKernel
-from .types import Dim3, as_dim3, check_launch_geometry
+from .types import (COOP_MAX_RESIDENT_BLOCKS, CoxUnsupported, Dim3, as_dim3,
+                    check_launch_geometry)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,13 +62,26 @@ def resolve_launch(ck: CompiledKernel, *, grid, block,
     grid3 = as_dim3(grid, "grid")
     block3 = as_dim3(block, "block")
     check_launch_geometry(grid3, block3)
+    if ck.n_phases > 1 and grid3.total > COOP_MAX_RESIDENT_BLOCKS:
+        # CUDA's cooperative-launch constraint (cudaLaunchCooperativeKernel
+        # rejects grids beyond SMs × maxBlocksPerSM): a grid barrier needs
+        # every block resident per phase — here, every block's carried
+        # state (locals + shared memory) live across the phase sequence.
+        raise CoxUnsupported(
+            f"cooperative launch of '{ck.kernel.name}': grid="
+            f"{grid3.total} blocks exceeds the resident capacity "
+            f"({COOP_MAX_RESIDENT_BLOCKS}) — grid_sync requires every "
+            f"block resident per phase; shrink the grid (grid-stride "
+            f"the work) as on CUDA")
     bname = _flat.choose_backend(ck.kernel, grid=grid3.total, mesh=mesh,
                                  requested=backend)
     n_warps = -(-block3.total // ck.warp_size)
     mode = _flat.choose_mode(ck.kernel, n_warps=n_warps, requested=mode)
+    machines = (ck.machine if not ck.phases
+                else tuple(p.machine for p in ck.phases))
     warp_exec = _flat.choose_warp_exec(ck.kernel, n_warps=n_warps,
                                        requested=warp_exec,
-                                       machine=ck.machine)
+                                       machine=machines)
     return ResolvedLaunch(grid3, block3, bname, mode, warp_exec, n_warps)
 
 

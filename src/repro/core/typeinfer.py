@@ -7,11 +7,10 @@ variable's type at execution, matching C assignment semantics.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from . import kernel_ir as K
-from .types import (ArraySpec, CoxTypeError, DType, ScalarSpec, SharedSpec,
-                    promote)
+from .types import ArraySpec, CoxTypeError, DType, ScalarSpec, promote
 
 _INT_PRESERVING = {"//", "%", "&", "|", "^", "<<", ">>"}
 

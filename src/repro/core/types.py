@@ -22,6 +22,16 @@ CUDA_MAX_BLOCK = (1024, 1024, 64)
 CUDA_MAX_BLOCK_THREADS = 1024
 CUDA_MAX_GRID = (2**31 - 1, 65535, 65535)
 
+# Cooperative-launch residency cap: CUDA's cudaLaunchCooperativeKernel
+# requires every block of the grid to be simultaneously resident (SMs ×
+# maxBlocksPerSM); a grid that does not fit cannot reach a grid barrier.
+# Our analogue: every block's persistent state (locals + shared memory)
+# is carried live between phase executables, so the whole grid must fit
+# one resident wave of the chunk schedule.  The cap mirrors a large
+# device (e.g. 108 SMs × 32 blocks ≈ 3456); launches above it raise
+# CoxUnsupported exactly like cudaLaunchCooperativeKernel errors out.
+COOP_MAX_RESIDENT_BLOCKS = 4096
+
 
 class CoxUnsupported(Exception):
     """Raised when a kernel uses a feature outside the supported set.
@@ -169,12 +179,18 @@ def check_launch_geometry(grid: Dim3, block: Dim3):
 
 
 class BarrierLevel(enum.Enum):
-    """Hierarchy of barrier scopes — the paper's central distinction."""
+    """Hierarchy of barrier scopes — the paper's central distinction,
+    extended one level up: WARP < BLOCK < GRID."""
     WARP = "warp"    # __syncwarp() / implicit from warp collectives (RAW/WAR)
     BLOCK = "block"  # __syncthreads()
+    GRID = "grid"    # this_grid().sync() — cooperative-groups grid barrier
 
-    def __ge__(self, other: "BarrierLevel") -> bool:  # BLOCK subsumes WARP
-        return self == BarrierLevel.BLOCK or self == other
+    @property
+    def rank(self) -> int:
+        return {"warp": 0, "block": 1, "grid": 2}[self.value]
+
+    def __ge__(self, other: "BarrierLevel") -> bool:  # wider scope subsumes
+        return self.rank >= other.rank
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,10 +13,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Any, Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig, ShapeConfig

@@ -1,12 +1,6 @@
 """Shared Pallas utilities."""
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
 try:  # TPU-specific namespace (present in jax 0.8)
     import jax.experimental.pallas.tpu as pltpu
 except Exception:  # pragma: no cover

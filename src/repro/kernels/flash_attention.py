@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import NEG_INF, cdiv, compiler_params, vmem_scratch
+from .common import NEG_INF, compiler_params, vmem_scratch
 
 DEFAULT_BQ = 128
 DEFAULT_BK = 128
@@ -64,9 +64,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(ik == nk - 1)
     def _finish():
-        l = l_scr[...]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lsum = l_scr[...]
+        lsum = jnp.where(lsum == 0.0, 1.0, lsum)
+        o_ref[0] = (acc_scr[...] / lsum[:, None]).astype(o_ref.dtype)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
@@ -142,9 +142,9 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
     @pl.when(ik == nk - 1)
     def _finish():
-        l = l_scr[...]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lsum = l_scr[...]
+        lsum = jnp.where(lsum == 0.0, 1.0, lsum)
+        o_ref[0] = (acc_scr[...] / lsum[:, None]).astype(o_ref.dtype)
 
 
 def flash_decode(q, k_cache, v_cache, kv_len, *, scale=None,

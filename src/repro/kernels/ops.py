@@ -12,11 +12,9 @@ This is the hook the §Perf iterations toggle per-op.
 """
 from __future__ import annotations
 
-import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
 from . import flash_attention as _fa
 from . import norms as _norms

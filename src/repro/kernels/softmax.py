@@ -6,8 +6,6 @@ one VPU reduction here instead of a 32-step scalar loop (Table 2).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import cdiv, compiler_params, vmem_scratch
+from .common import compiler_params, vmem_scratch
 
 DEFAULT_CHUNK = 128
 

@@ -27,7 +27,6 @@ COL_TILE = 2048
 
 
 def _reduce_kernel(x_ref, o_ref, *, op: str, n_col_tiles: int, cols: int):
-    r = x_ref.shape[0]
     acc = None
     for t in range(n_col_tiles):  # inter-warp loop over column tiles
         lo = t * COL_TILE

@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^^ MUST precede any jax import: jax locks device count at first init.
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
 For each cell this prints/records:
@@ -17,19 +13,20 @@ Usage:
 """
 import argparse
 import json
+import os
 import re
 import sys
 import time
 import traceback
 from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax import: jax locks device count at first init.
 
-from ..configs import registry
-from ..configs.base import LONG_CONTEXT_OK, SHAPES
-from ..parallel import steps as steps_mod
-from .mesh import make_production_mesh
+from ..configs import registry  # noqa: E402
+from ..configs.base import LONG_CONTEXT_OK, SHAPES  # noqa: E402
+from ..parallel import steps as steps_mod  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
 
 # ---------------------------------------------------------------------------
 # HLO collective-byte accounting
@@ -118,7 +115,6 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                            "strategy": strategy,
                            "overrides": dict(overrides or {}),
                            "mesh": "2x16x16" if multi_pod else "16x16"}
-    shape = SHAPES[shape_name]
     if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
         rec["status"] = "skipped"
         rec["reason"] = ("full quadratic attention at 524288 ctx — "
@@ -187,7 +183,6 @@ def main(argv=None):
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
-    cells = []
     archs = registry.names() if (args.all or not args.arch) else [args.arch]
     shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
     pods = {"on": [True], "off": [False], "both": [False, True]}[

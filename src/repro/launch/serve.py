@@ -19,7 +19,7 @@ import numpy as np
 
 from ..configs import registry
 from ..configs.base import ShapeConfig
-from ..models.params import init_params, tree_abstract
+from ..models.params import init_params
 from ..parallel import steps as steps_mod
 from .mesh import make_host_mesh
 from . import specs as S

@@ -7,14 +7,11 @@ straggler watchdog, deterministic resume, and failure drills.
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import os
 import time
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint.ckpt import CheckpointManager
 from ..configs import registry

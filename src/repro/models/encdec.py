@@ -8,8 +8,6 @@ encoder memory precomputed.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict
 
 import jax

@@ -7,9 +7,7 @@ CPU dry-run.  Activation shardings are expressed with
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,7 @@ trick; numerics simulated exactly, wire savings counted in §Perf)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +34,8 @@ def schedule(cfg: AdamWConfig, step):
 
 
 def init_state(params, cfg: AdamWConfig) -> Dict[str, Any]:
-    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros32(p):
+        return jnp.zeros(p.shape, jnp.float32)
     st = {
         "m": jax.tree_util.tree_map(zeros32, params),
         "v": jax.tree_util.tree_map(zeros32, params),

@@ -7,8 +7,7 @@ shardings, abstract inputs) so the same builder serves the dry-run
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -100,7 +99,7 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh,
 
     p_sh = param_shardings(rules, spec_tree)
     o_sh = opt_shardings(rules, spec_tree, opt_cfg)
-    shape = None  # batch shardings supplied by caller per shape
+    # batch shardings are supplied by the caller per shape
     return step, {"rules": rules, "specs": spec_tree, "param_sh": p_sh,
                   "opt_sh": o_sh, "opt_cfg": opt_cfg}
 

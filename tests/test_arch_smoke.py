@@ -6,9 +6,8 @@ import numpy as np
 import pytest
 
 from repro.configs import registry
-from repro.configs.base import reduced
 from repro.models import encdec, lm
-from repro.models.params import init_params, tree_abstract
+from repro.models.params import init_params
 
 ARCHS = registry.names()
 

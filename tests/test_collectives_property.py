@@ -119,14 +119,13 @@ def test_invalid_tile_width_rejected():
 
 # hypothesis fuzz layer (skips cleanly when hypothesis is absent)
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, strategies as st
     HAVE_HYP = True
 except ImportError:
     HAVE_HYP = False
 
 if HAVE_HYP:
-    settings.register_profile("ci", deadline=None, max_examples=25)
-    settings.load_profile("ci")
+    # profile selection lives in tests/conftest.py (HYPOTHESIS_PROFILE)
 
     @given(
         func=st.sampled_from(FUNCS),

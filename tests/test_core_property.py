@@ -7,11 +7,10 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import cox
-from repro.core.oracle import run_grid as oracle_run
+from repro.core import cox  # noqa: E402
+from repro.core.oracle import run_grid as oracle_run  # noqa: E402
 
-settings.register_profile("ci", deadline=None, max_examples=20)
-settings.load_profile("ci")
+# profile selection lives in tests/conftest.py (HYPOTHESIS_PROFILE)
 
 
 # --- kernels exercised by the properties -----------------------------------

@@ -141,7 +141,7 @@ def test_dynamic_coop_group_rejected():
     with pytest.raises(CoxUnsupported):
         @cox.kernel
         def bad(c, out: cox.Array(cox.f32)):
-            g = c.coalesced_threads()
+            _g = c.coalesced_threads()
 
 
 def test_barrier_insertion_adds_entry_exit():

@@ -132,8 +132,11 @@ def _geom_ref(grid3: Dim3, block3: Dim3):
     bx = b % grid3.x
     by = (b // grid3.x) % grid3.y
     bz = b // (grid3.x * grid3.y)
-    tile = lambda v: np.tile(v, nb)
-    rep = lambda v: np.repeat(v, nt)
+    def tile(v):
+        return np.tile(v, nb)
+
+    def rep(v):
+        return np.repeat(v, nt)
     return {"tx": tile(tx), "ty": tile(ty), "tz": tile(tz),
             "bx": rep(bx), "by": rep(by), "bz": rep(bz)}
 

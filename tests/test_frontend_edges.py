@@ -37,7 +37,7 @@ def test_dynamic_tile_width_rejected():
         @cox.kernel
         def k(c, out: cox.Array(cox.f32), w: cox.i32):
             v = out[c.thread_idx()]
-            s = c.red_add(v, width=w)
+            _s = c.red_add(v, width=w)
 
 
 def test_warp_call_nested_in_expression_rejected():

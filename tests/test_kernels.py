@@ -1,5 +1,4 @@
 """Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp ref."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -9,12 +9,10 @@ import numpy as np
 import pytest
 
 from repro.configs import registry
-from repro.configs.base import ModelConfig
 from repro.kernels import ref
 from repro.models import layers as L
-from repro.models import lm
-from repro.models.params import (AxisRules, ParamSpec, default_rules,
-                                 init_params, zero1_pspec)
+from repro.models.params import (ParamSpec, default_rules, init_params,
+                                 zero1_pspec)
 
 RNG = np.random.default_rng(11)
 

@@ -7,8 +7,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
-
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -57,6 +55,30 @@ def test_cox_atomics_psum_merge():
         want = np.bincount(a, minlength=16).astype(np.float32)
         np.testing.assert_allclose(np.asarray(got["hist"]), want)
         print("atomics OK")
+    """)
+
+
+def test_cox_grid_sync_sharded_8dev():
+    # cooperative grid barrier across a real mesh: each device keeps its
+    # slice of the grid resident across phases, and the per-phase
+    # masked-psum merge is what lets phase-1 blocks on one device read
+    # phase-0 partials written on every other device
+    run_worker("""
+        import jax, numpy as np
+        from benchmarks.kernels_suite import all_kernels
+        from repro.core.oracle import run_grid as oracle_run
+        assert len(jax.devices()) == 8
+        sk = next(k for k in all_kernels() if k.name == "gridReduce")
+        args = sk.make_args()
+        mesh = jax.make_mesh((8,), ("data",))
+        got = sk.kernel.launch(grid=sk.grid, block=sk.block, args=args,
+                               mesh=mesh)
+        ref = oracle_run(sk.kernel.ir, grid=sk.grid, block=sk.block,
+                         args=args)
+        for k in ref:
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(ref[k]), err_msg=k)
+        print("grid-sync sharded OK")
     """)
 
 

@@ -1,6 +1,4 @@
 """End-to-end behaviour tests for the whole system."""
-import numpy as np
-import pytest
 
 
 def test_quickstart_example():
