@@ -13,9 +13,13 @@ by diffing the smoke output against the committed baseline
   in the committed baseline (the perf trajectory stays comparable);
 * every entry has the full single-device cell set (scan/vmap ×
   serial/batched, plus the w/o-AVX cells for warp-feature kernels) with
-  sane timings.
+  sane timings;
+* the ``streams`` section produced its overlap cells (every pipeline
+  depth, sane timings, bitwise equality asserted in-process) in the
+  smoke run, and the committed baseline carries the full-run cells —
+  including the two-kernel pair's recorded overlap ratio.
 
-Usage: ``python benchmarks/check_smoke.py BENCH_SMOKE.json BENCH_PR3.json``
+Usage: ``python benchmarks/check_smoke.py BENCH_SMOKE.json BENCH_PR5.json``
 """
 
 from __future__ import annotations
@@ -30,6 +34,8 @@ from benchmarks.run import SWEEP_SMOKE_PICKS  # noqa: E402
 
 REQUIRED_CELLS = ("scan_serial", "scan_batched", "vmap_serial", "vmap_batched")
 NOAVX_CELLS = ("scan_serial_noavx", "scan_batched_noavx")
+STREAM_DEPTHS = (1, 2, 4)  # pipeline depths every run must cover
+STREAM_FIELDS = ("serial_us", "stream_us", "overlap_x")
 
 
 def fail(msg: str) -> None:
@@ -87,10 +93,38 @@ def main(argv: list[str]) -> None:
         if f"backend_sweep.{kernel}" not in row_names:
             fail(f"{kernel}: CSV row missing from the smoke output")
 
+    check_streams(smoke, baseline, row_names)
+
     print(
         f"check_smoke: OK — {len(SWEEP_SMOKE_PICKS)} kernels × "
-        f"{len(REQUIRED_CELLS)}+ cells present; equality asserts ran in-process"
+        f"{len(REQUIRED_CELLS)}+ cells present; streams cells × "
+        f"{len(STREAM_DEPTHS)} depths present; equality asserts ran in-process"
     )
+
+
+def check_streams(smoke: dict, baseline: dict, row_names: set) -> None:
+    if "streams" not in smoke.get("sections", []):
+        fail(f"smoke run missed the streams section: {smoke.get('sections')}")
+    for tag, payload in (("smoke", smoke), ("baseline", baseline)):
+        by_depth = {e.get("depth"): e for e in payload.get("streams", [])}
+        missing = [d for d in STREAM_DEPTHS if d not in by_depth]
+        if missing:
+            fail(
+                f"{tag}: streams cells missing depths {missing} "
+                f"(present: {sorted(by_depth)})"
+            )
+        for depth in STREAM_DEPTHS:
+            entry = by_depth[depth]
+            for field in STREAM_FIELDS:
+                value = entry.get(field)
+                if not isinstance(value, (int, float)) or value <= 0:
+                    fail(
+                        f"{tag}: streams depth {depth}: field {field!r} "
+                        f"missing or non-positive ({value!r})"
+                    )
+    for depth in STREAM_DEPTHS:
+        if f"streams.pair_depth{depth}" not in row_names:
+            fail(f"streams.pair_depth{depth}: CSV row missing from smoke output")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,9 @@ flagship kernels only).
   backend_sweep — grid-execution backends × warp execution: scan vs vmap
                   (vs sharded when >1 device) × serial vs batched warps,
                   equal outputs asserted + timing per cell
+  streams       — async launch dispatch: two independent memory-bound
+                  kernels on two cox streams vs serial issue, bitwise
+                  equality asserted + overlap ratio per pipeline depth
   scalability   — Fig. 14: blocks across host devices (subprocess, 8 dev)
   roofline      — §Roofline terms from results/dryrun_all.json (if present)
 """
@@ -40,8 +43,9 @@ from repro.core.types import CoxUnsupported  # noqa: E402
 WARMUP = 2
 ITERS = 10
 SMOKE = False
-RESULTS = []        # every CSV row, as dicts
-SWEEP_RESULTS = []  # structured backend_sweep matrix
+RESULTS = []         # every CSV row, as dicts
+SWEEP_RESULTS = []   # structured backend_sweep matrix
+STREAM_RESULTS = []  # structured streams-overlap cells
 
 # backend_sweep kernel picks — module-level so the CI regression gate
 # (benchmarks/check_smoke.py) can assert the smoke run covered them
@@ -303,6 +307,99 @@ def backend_sweep():
 # ---------------------------------------------------------------------------
 
 
+def streams():
+    """Async streams: two independent memory-bound kernels (saxpy and a
+    scale — streaming stores, ~zero arithmetic intensity) issued on two
+    ``cox.Stream``\\ s (enqueue both, synchronize after) vs serial issue
+    (launch + synchronize each, the pre-stream ``KernelFn.launch``
+    discipline).  Outputs are asserted bitwise-equal first — any legal
+    stream schedule must match serial issue.  On a single XLA device the
+    win is host/device pipelining: while kernel A executes, the host
+    binds and dispatches B (and materializes A's result), exactly CUDA's
+    copy/compute-overlap story.  ``depth`` is the per-stream in-order
+    pipeline length (pairs in flight before the sync) — deeper queues
+    amortize more host work, so the ratio grows with depth."""
+    import gc
+    from repro.core import cox
+
+    @cox.kernel
+    def streamSaxpy(c, out: cox.Array(cox.f32), x: cox.Array(cox.f32),
+                    y: cox.Array(cox.f32), n: cox.i32):
+        i = c.block_idx() * c.block_dim() + c.thread_idx()
+        if i < n:
+            out[i] = 2.5 * x[i] + y[i]
+
+    @cox.kernel
+    def streamScale(c, out: cox.Array(cox.f32), x: cox.Array(cox.f32),
+                    n: cox.i32):
+        i = c.block_idx() * c.block_dim() + c.thread_idx()
+        if i < n:
+            out[i] = x[i] * 3.0 + 1.0
+
+    grid, block = 32, 256
+    n = grid * block
+    x = np.arange(n, dtype=np.float32) / n
+    y = np.ones(n, np.float32)
+    o = np.zeros(n, np.float32)
+    a1, a2 = (o, x, y, n), (o, x, n)
+    s1, s2 = cox.Stream("bench-s1"), cox.Stream("bench-s2")
+
+    def serial(depth):
+        outs = []
+        for _ in range(depth):
+            r1 = streamSaxpy.launch(grid=grid, block=block, args=a1)
+            outs.append(np.asarray(r1["out"]))
+            r2 = streamScale.launch(grid=grid, block=block, args=a2)
+            outs.append(np.asarray(r2["out"]))
+        return outs
+
+    def streamed(depth):
+        hs = []
+        for _ in range(depth):
+            hs.append(s1.launch(streamSaxpy, grid=grid, block=block,
+                                args=a1))
+            hs.append(s2.launch(streamScale, grid=grid, block=block,
+                                args=a2))
+        return [np.asarray(h.result()["out"]) for h in hs]
+
+    # bitwise: any legal stream schedule == serial issue
+    for got, want in zip(streamed(2), serial(2)):
+        np.testing.assert_array_equal(got, want)
+
+    # medians need many alternated samples: the pair runs in ~2.5 ms, so
+    # scheduler jitter on a shared host is a large fraction of one trial
+    iters = 1 if SMOKE else max(ITERS * 12, 120)
+    gc.disable()
+    try:
+        for depth in (1, 2, 4):
+            ts, to = [], []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                serial(depth)
+                ts.append(time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                streamed(depth)
+                to.append(time.perf_counter() - t0)
+            serial_us = statistics.median(ts) * 1e6
+            stream_us = statistics.median(to) * 1e6
+            ratio = serial_us / stream_us
+            _row(f"streams.pair_depth{depth}", stream_us,
+                 f"serial_us={serial_us:.1f};overlap={ratio:.2f}x;"
+                 f"kernels=streamSaxpy+streamScale;n={n}")
+            STREAM_RESULTS.append({
+                "pair": "streamSaxpy+streamScale", "depth": depth,
+                "grid": grid, "block": block, "n": n,
+                "serial_us": round(serial_us, 1),
+                "stream_us": round(stream_us, 1),
+                "overlap_x": round(ratio, 2),
+            })
+    finally:
+        gc.enable()
+
+
+# ---------------------------------------------------------------------------
+
+
 def scalability():
     """Fig. 14: multi-block kernels across host devices (8-dev subprocess
     — device count must be set before jax initializes)."""
@@ -348,6 +445,7 @@ SECTIONS = {
     "simd_vote": simd_vote,
     "jit_mode": jit_mode,
     "backend_sweep": backend_sweep,
+    "streams": streams,
     "scalability": scalability,
     "roofline": roofline,
 }
@@ -356,10 +454,10 @@ SECTIONS = {
 def main(argv=None) -> None:
     global WARMUP, ITERS, SMOKE
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--json", nargs="?", const="BENCH_PR3.json", default=None,
+    p.add_argument("--json", nargs="?", const="BENCH_PR5.json", default=None,
                    metavar="PATH",
                    help="write machine-readable results (default path "
-                        "BENCH_PR3.json when the flag is given bare)")
+                        "BENCH_PR5.json when the flag is given bare)")
     p.add_argument("--sections", default=None,
                    help=f"comma-separated subset of {sorted(SECTIONS)}")
     p.add_argument("--smoke", action="store_true",
@@ -377,12 +475,13 @@ def main(argv=None) -> None:
         SECTIONS[name]()
     if args.json:
         payload = {
-            "schema": "cox-bench-v1",
+            "schema": "cox-bench-v2",
             "smoke": SMOKE,
             "iters": ITERS,
             "sections": names,
             "rows": RESULTS,
             "backend_sweep": SWEEP_RESULTS,
+            "streams": STREAM_RESULTS,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

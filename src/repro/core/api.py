@@ -19,8 +19,13 @@ from typing import Any, Dict, Optional, Sequence
 from . import flat as _flat
 from . import kernel_ir as K
 from . import runtime as _runtime
+from . import streams as _streams
+from .backends.plan import bind_kernel_args, check_donate_supported
 from .execute import CompiledKernel, compile_kernel
 from .frontend import Array, parse_kernel  # noqa: F401  (cox.Array re-export)
+from .streams import (Event, default_stream, synchronize,  # noqa: F401
+                      LaunchHandle, Stream, get_dispatcher)
+from .streams import _mesh_key  # noqa: F401  (compat re-export for tests)
 from .types import (CoxUnsupported, DType, Dim3, WARP_SIZE,  # noqa: F401
                     as_dim3)  # Dim3 re-exported: cox.Dim3 launch geometry
 
@@ -35,13 +40,20 @@ b1 = DType.b1
 
 @dataclasses.dataclass
 class KernelFn:
-    """A parsed CUDA-style kernel plus two caches: the pass-pipeline
-    cache (``compiled``) and a launch-level cache of staged executables
-    keyed on the full launch geometry, so repeat launches skip both the
-    pass pipeline and the JAX retrace."""
+    """A parsed CUDA-style kernel plus the pass-pipeline cache
+    (``compiled``).  The launch-level cache of staged executables lives
+    behind the stream dispatcher (``repro.core.streams``) and is shared
+    across every stream — ``_launch_cache`` below is a read view of this
+    kernel's entries, keyed exactly as before."""
     ir: K.Kernel
     _cache: Dict[Any, CompiledKernel] = dataclasses.field(default_factory=dict)
-    _launch_cache: Dict[Any, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def _launch_cache(self) -> Dict[Any, Any]:
+        """This kernel's staged ``(plan, exe)`` entries in the
+        dispatcher's shared cache (backward-compatible key shape:
+        compile token first, phase count second)."""
+        return get_dispatcher().cache_view(self._cache.values())
 
     @property
     def name(self) -> str:
@@ -80,13 +92,45 @@ class KernelFn:
         return self._compiled_for(self._compile_key(
             collapse=collapse, warp_size=warp_size, block=block))
 
+    def make_request(self, *, grid, block, args: Sequence[Any],
+                     collapse: str = "hybrid", mode: str = "auto",
+                     simd: bool = True, warp_size: int = WARP_SIZE,
+                     mesh=None, axis: str = "data", backend: str = "auto",
+                     chunk: Optional[int] = None, warp_exec: str = "auto",
+                     donate: bool = False) -> _streams.LaunchRequest:
+        """Resolve the launch knobs and bind the arguments into a
+        :class:`~repro.core.streams.LaunchRequest` — the unit the stream
+        dispatcher consumes.  Compilation (the pass pipeline) and knob
+        resolution happen here, eagerly, so bad launches fail at the
+        call site; staging and dispatch happen later, behind the
+        dispatcher."""
+        block3 = as_dim3(block, "block")
+        token = self._compile_key(collapse=collapse, warp_size=warp_size,
+                                  block=block3.total)
+        ck = self._compiled_for(token)
+        rl = _runtime.resolve_launch(ck, grid=grid, block=block3, mode=mode,
+                                     backend=backend, warp_exec=warp_exec,
+                                     mesh=mesh)
+        if donate:
+            # fail at the call site, not at deferred staging
+            check_donate_supported(rl.backend, ck.kernel.name)
+        globals_, shapes, scalars = bind_kernel_args(ck, args)
+        return _streams.LaunchRequest(
+            ck=ck, token=token, rl=rl, simd=simd, chunk=chunk, mesh=mesh,
+            axis=axis, donate=donate, globals_=globals_, shapes=shapes,
+            scalars=scalars)
+
     def launch(self, *, grid, block, args: Sequence[Any],
                collapse: str = "hybrid", mode: str = "auto",
                simd: bool = True, warp_size: int = WARP_SIZE,
                mesh=None, axis: str = "data", backend: str = "auto",
                chunk: Optional[int] = None,
-               warp_exec: str = "auto") -> Dict[str, Any]:
-        """Launch with backend dispatch (see ``repro.core.backends``).
+               warp_exec: str = "auto", donate: bool = False,
+               stream: Optional[Stream] = None) -> Dict[str, Any]:
+        """Launch with backend dispatch (see ``repro.core.backends``):
+        enqueue on the (default) stream and dispatch — the async CUDA
+        ``kernel<<<...>>>()`` itself, with the outputs handed back as
+        XLA futures.
 
         ``grid``/``block`` accept CUDA dim3 geometry — ``int | (x, y[,
         z])`` — normalized to one canonical form (missing axes are 1),
@@ -97,51 +141,36 @@ class KernelFn:
         inter-warp loop and the batched (n_warps, W) lane plane;
         ``mode='auto'|'normal'|'jit'`` picks loop-carried vs unrolled
         inter-warp iteration (all three resolved by ``repro.core.flat``
-        heuristics when 'auto', keyed on the normalized totals)."""
-        block3 = as_dim3(block, "block")
-        token = self._compile_key(collapse=collapse, warp_size=warp_size,
-                                  block=block3.total)
-        ck = self._compiled_for(token)
-        rl = _runtime.resolve_launch(ck, grid=grid, block=block3, mode=mode,
-                                     backend=backend, warp_exec=warp_exec,
-                                     mesh=mesh)
-        # n_phases is derivable from the compile token but spelled out so
-        # cooperative (grid-sync) staging can never collide with a
-        # single-phase executable of the same geometry
-        key = (token, ck.n_phases, rl.backend, rl.mode, rl.grid.astuple(),
-               rl.block.astuple(), rl.n_warps, simd, chunk, rl.warp_exec,
-               _mesh_key(mesh), axis)
-        cached = self._launch_cache.get(key)
-        if cached is None:
-            cached = self._launch_cache[key] = _runtime.build_resolved(
-                ck, rl, simd=simd, mesh=mesh, axis=axis, chunk=chunk)
-        plan, exe = cached
-        globals_, shapes, scalars = plan.bind_args(args)
-        out = exe(globals_, scalars)
-        return {k: v.reshape(shapes[k]) for k, v in out.items()}
+        heuristics when 'auto', keyed on the normalized totals).
+
+        ``donate=True`` donates the flat global buffers to the staged
+        executable (buffer reuse instead of copies — the bound arrays
+        are consumed); ``stream=`` enqueues on a non-default
+        :class:`cox.Stream` instead.
+
+        The returned arrays are XLA futures, exactly as before the
+        stream refactor — the launch is *dispatched* (host errors
+        surface here) but the host does not block on device completion,
+        so back-to-back launches keep pipelining; use
+        :meth:`launch_async` / ``stream.launch`` to also defer
+        dispatch."""
+        return self.launch_async(
+            grid=grid, block=block, args=args, collapse=collapse,
+            mode=mode, simd=simd, warp_size=warp_size, mesh=mesh,
+            axis=axis, backend=backend, chunk=chunk, warp_exec=warp_exec,
+            donate=donate, stream=stream).arrays()
+
+    def launch_async(self, *, stream: Optional[Stream] = None,
+                     **knobs) -> LaunchHandle:
+        """Enqueue on ``stream`` (default: the legacy-sync default
+        stream) and return a :class:`LaunchHandle` future immediately —
+        the async CUDA launch.  Takes the same keyword knobs as
+        :meth:`launch`."""
+        st = stream if stream is not None else get_dispatcher().default
+        return st.launch(self, **knobs)
 
     def uses_warp_features(self) -> bool:
         return K.uses_warp_features(self.ir)
-
-
-def _mesh_key(mesh) -> Any:
-    """A hashable stand-in for the mesh in launch-cache keys, built from
-    stable content (axis names/sizes + device ids).  Object identity is
-    NOT a safe key: ``id()`` of a garbage-collected mesh can be recycled
-    by a new mesh, which would then hit a stale executable closed over
-    the old devices."""
-    if mesh is None:
-        return None
-    try:
-        return ("mesh", tuple(mesh.shape.items()),
-                tuple(d.id for d in mesh.devices.flat))
-    except (AttributeError, TypeError):
-        pass
-    try:
-        hash(mesh)
-        return mesh
-    except TypeError:
-        return ("unhashable-mesh", id(mesh), repr(mesh))
 
 
 def kernel(fn=None, *, name: Optional[str] = None):

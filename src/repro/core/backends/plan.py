@@ -22,6 +22,44 @@ from ..types import (COOP_MAX_RESIDENT_BLOCKS, ArraySpec, CoxUnsupported,
 DEFAULT_CHUNK = 8  # blocks run simultaneously per vmap step
 
 
+def check_donate_supported(backend: str, kernel_name: str) -> None:
+    """Donation aliases each global's single device buffer; the sharded
+    backend has none to alias (globals enter shard_map replicated and
+    leave through a cross-device psum merge).  One shared check so the
+    eager rejection in ``api.KernelFn.make_request`` and the build-time
+    rejection in ``backends.sharded`` can never drift apart."""
+    if backend == "sharded":
+        raise CoxUnsupported(
+            f"kernel '{kernel_name}': donate=True is unsupported on the "
+            f"sharded backend — replicated cross-device globals have no "
+            f"single buffer to reuse; drop donate= or launch without a "
+            f"mesh")
+
+
+def bind_kernel_args(ck: CompiledKernel, args: Sequence[Any]
+                     ) -> Tuple[Dict[str, Any], Dict[str, tuple],
+                                Dict[str, Any]]:
+    """Split positional args into (globals dict, shapes, scalar
+    uniforms); arrays are flattened (CUDA pointer semantics).  A module
+    function (not only a plan method) because the stream dispatch layer
+    binds args at *enqueue* time, before any plan is staged."""
+    if len(args) != len(ck.kernel.params):
+        raise TypeError(f"kernel {ck.kernel.name} takes "
+                        f"{len(ck.kernel.params)} args, "
+                        f"got {len(args)}")
+    globals_: Dict[str, Any] = {}
+    shapes: Dict[str, tuple] = {}
+    scalars: Dict[str, Any] = {}
+    for spec, val in zip(ck.kernel.params, args):
+        if isinstance(spec, ArraySpec):
+            arr = jnp.asarray(val, spec.dtype.jnp)
+            shapes[spec.name] = arr.shape
+            globals_[spec.name] = arr.reshape(-1)
+        else:
+            scalars[spec.name] = jnp.asarray(val, spec.dtype.jnp)
+    return globals_, shapes, scalars
+
+
 @dataclasses.dataclass(frozen=True)
 class LaunchPlan:
     """Immutable description of one ``kernel<<<grid, block>>>`` launch.
@@ -171,21 +209,7 @@ class LaunchPlan:
                   ) -> Tuple[Dict[str, Any], Dict[str, tuple], Dict[str, Any]]:
         """Split positional args into (globals dict, shapes, scalar
         uniforms); arrays are flattened (CUDA pointer semantics)."""
-        if len(args) != len(self.ck.kernel.params):
-            raise TypeError(f"kernel {self.ck.kernel.name} takes "
-                            f"{len(self.ck.kernel.params)} args, "
-                            f"got {len(args)}")
-        globals_: Dict[str, Any] = {}
-        shapes: Dict[str, tuple] = {}
-        scalars: Dict[str, Any] = {}
-        for spec, val in zip(self.ck.kernel.params, args):
-            if isinstance(spec, ArraySpec):
-                arr = jnp.asarray(val, spec.dtype.jnp)
-                shapes[spec.name] = arr.shape
-                globals_[spec.name] = arr.reshape(-1)
-            else:
-                scalars[spec.name] = jnp.asarray(val, spec.dtype.jnp)
-        return globals_, shapes, scalars
+        return bind_kernel_args(self.ck, args)
 
     def uniforms(self, bid, scalars: Dict[str, Any]) -> Dict[str, Any]:
         """The block-uniform environment for one block (or a batch of

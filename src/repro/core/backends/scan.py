@@ -24,10 +24,14 @@ from .plan import LaunchPlan
 name = "scan"
 
 
-def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
-    """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher."""
+def build(plan: LaunchPlan, mesh=None, axis: str = "data",
+          donate: bool = False):
+    """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher.
+    ``donate=True`` donates the globals dict (argnum 0): every input
+    buffer has a same-shape output to alias, so XLA reuses it in place
+    instead of copying — the caller must treat the inputs as consumed."""
     if plan.n_phases > 1:
-        return _build_phased(plan)
+        return _build_phased(plan, donate=donate)
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
                              simd=plan.simd, warp_exec=plan.warp_exec,
                              block_dim=plan.block_dim, grid_dim=plan.grid_dim)
@@ -41,10 +45,10 @@ def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
                         jnp.arange(plan.grid, dtype=jnp.int32))
         return g
 
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=(0,) if donate else ())
 
 
-def _build_phased(plan: LaunchPlan):
+def _build_phased(plan: LaunchPlan, donate: bool = False):
     fns = plan.block_fns(track_writes=False)
     bids = jnp.arange(plan.grid, dtype=jnp.int32)
 
@@ -61,4 +65,4 @@ def _build_phased(plan: LaunchPlan):
             g, state = lax.scan(step, g, (bids, state))
         return g
 
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=(0,) if donate else ())

@@ -20,15 +20,18 @@ from ..compat import shard_map
 from ..execute import make_block_fn
 from . import merge
 from .block_vmap import run_chunked, run_phase_wave
-from .plan import LaunchPlan
+from .plan import LaunchPlan, check_donate_supported
 
 name = "sharded"
 
 
-def build(plan: LaunchPlan, mesh=None, axis: str = "data"):
+def build(plan: LaunchPlan, mesh=None, axis: str = "data",
+          donate: bool = False):
     """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher."""
     if mesh is None:
         raise ValueError("the sharded backend needs a mesh")
+    if donate:
+        check_donate_supported(name, plan.ck.kernel.name)
     plan.check_mergeable(name)
     if plan.n_phases > 1:
         return _build_phased(plan, mesh, axis)

@@ -174,27 +174,64 @@ class _Parser(ast.NodeVisitor):
             return self._call_expr(node)
         raise self.err(node, f"unsupported expression {type(node).__name__}")
 
+    def _linearize(self, arr_name: str, idxs: List[K.Expr], node) -> K.Expr:
+        """Row-major linearization of per-axis indices against a shared
+        array's static shape (the CUDA `tile[y][x]` address math)."""
+        shape = self.shared[arr_name].shape
+        if len(idxs) != len(shape):
+            raise self.err(node, "index rank mismatch")
+        flat: K.Expr = idxs[0]
+        for dim, ix in zip(shape[1:], idxs[1:]):
+            flat = K.BinOp("+", K.BinOp("*", flat, K.Const(int(dim), DType.i32)), ix)
+        return flat
+
     def _index(self, arr_name: str, node) -> K.Expr:
         """Indices: 1-D for globals (CUDA pointer semantics); shared arrays
         with known shape accept tuple indices, linearized here."""
         if isinstance(node, ast.Tuple):
             if arr_name not in self.shared:
                 raise self.err(node, "multi-dim index only on shared arrays")
-            shape = self.shared[arr_name].shape
-            idxs = [self.expr(e) for e in node.elts]
-            if len(idxs) != len(shape):
-                raise self.err(node, "index rank mismatch")
-            flat: K.Expr = idxs[0]
-            for dim, ix in zip(shape[1:], idxs[1:]):
-                flat = K.BinOp("+", K.BinOp("*", flat, K.Const(int(dim), DType.i32)), ix)
-            return flat
+            return self._linearize(arr_name,
+                                   [self.expr(e) for e in node.elts], node)
         return self.expr(node)
 
+    def _subscript_chain(self, node: ast.Subscript):
+        """Peel a chained subscript — ``tile[ty][tx]`` (the CUDA 2-D
+        shared-array spelling) — into ``(name, [axis index nodes])``.
+        A plain ``name[idx]`` yields a single-element chain."""
+        idx_nodes = []
+        cur: ast.expr = node
+        while isinstance(cur, ast.Subscript):
+            idx_nodes.append(cur.slice)
+            cur = cur.value
+        if not isinstance(cur, ast.Name):
+            raise self.err(node, "only name[index] (optionally chained, "
+                                 "e.g. tile[ty][tx]) supported")
+        return cur.id, list(reversed(idx_nodes))
+
+    def _subscript_index(self, node: ast.Subscript):
+        """Resolve a load/store target subscript (plain, tuple, or
+        chained) to ``(array name, linear index expr)``."""
+        name, chain = self._subscript_chain(node)
+        if len(chain) == 1:
+            return name, self._index(name, chain[0])
+        # chained subscripts: CUDA's `tile[ty][tx]` on a static 2-D/3-D
+        # shared tile, lowered to the same row-major linearization as
+        # the tuple form `tile[ty, tx]`
+        if name not in self.shared:
+            raise self.err(node, f"chained subscripts ({name}[i][j]) are "
+                                 f"only supported on shared arrays with a "
+                                 f"static shape (globals are 1-D CUDA "
+                                 f"pointers — linearize the index)")
+        if any(isinstance(c, ast.Tuple) for c in chain):
+            raise self.err(node, "mixing tuple and chained subscripts "
+                                 "is unsupported — write tile[ty][tx] or "
+                                 "tile[ty, tx]")
+        return name, self._linearize(name, [self.expr(c) for c in chain],
+                                     node)
+
     def _load(self, node: ast.Subscript) -> K.Expr:
-        if not isinstance(node.value, ast.Name):
-            raise self.err(node, "only name[index] loads supported")
-        name = node.value.id
-        idx = self._index(name, node.slice)
+        name, idx = self._subscript_index(node)
         if name in self.shared:
             return K.LoadShared(name, idx, self.shared[name].dtype)
         if name in self.arrays:
@@ -403,10 +440,7 @@ class _Parser(ast.NodeVisitor):
                                      f"read-only; copy it to a local first")
             return [K.Assign(target.id, value)]
         if isinstance(target, ast.Subscript):
-            if not isinstance(target.value, ast.Name):
-                raise self.err(node, "only name[index] stores supported")
-            name = target.value.id
-            idx = self._index(name, target.slice)
+            name, idx = self._subscript_index(target)
             if name in self.shared:
                 return [K.StoreShared(name, idx, value)]
             if name in self.arrays:

@@ -87,13 +87,22 @@ def resolve_launch(ck: CompiledKernel, *, grid, block,
 
 def build_resolved(ck: CompiledKernel, rl: ResolvedLaunch, *,
                    simd: bool = True, mesh: Optional[Mesh] = None,
-                   axis: str = "data", chunk: Optional[int] = None):
+                   axis: str = "data", chunk: Optional[int] = None,
+                   donate: bool = False):
     """Build the plan and stage the jitted executable for an
     already-resolved launch.  Returns ``(plan, exe)`` with
-    ``exe(globals_, scalars) -> {name: flat array}``."""
+    ``exe(globals_, scalars) -> {name: flat array}``.
+
+    ``donate=True`` stages the executable with its global-memory inputs
+    donated (``jax.jit(..., donate_argnums=...)``): XLA reuses the input
+    buffers for the outputs instead of copying, so an in-order stream
+    re-launching over the same globals stops paying the copy.  The
+    caller must treat the passed arrays as *consumed* — JAX deletes
+    donated buffers, and re-using one raises."""
     plan = LaunchPlan.build(ck, grid=rl.grid, block=rl.block, mode=rl.mode,
                             simd=simd, chunk=chunk, warp_exec=rl.warp_exec)
-    exe = _backends.get_backend(rl.backend).build(plan, mesh=mesh, axis=axis)
+    exe = _backends.get_backend(rl.backend).build(plan, mesh=mesh, axis=axis,
+                                                  donate=donate)
     return plan, exe
 
 
@@ -101,12 +110,12 @@ def build_launcher(ck: CompiledKernel, *, grid, block,
                    mode: str = "auto", simd: bool = True,
                    mesh: Optional[Mesh] = None, axis: str = "data",
                    backend: str = "auto", chunk: Optional[int] = None,
-                   warp_exec: str = "auto"):
+                   warp_exec: str = "auto", donate: bool = False):
     """:func:`resolve_launch` + :func:`build_resolved` in one call."""
     rl = resolve_launch(ck, grid=grid, block=block, mode=mode,
                         backend=backend, warp_exec=warp_exec, mesh=mesh)
     return build_resolved(ck, rl, simd=simd, mesh=mesh, axis=axis,
-                          chunk=chunk)
+                          chunk=chunk, donate=donate)
 
 
 def launch(ck: CompiledKernel, *, grid, block, args: Sequence[Any],
@@ -131,13 +140,22 @@ def launch(ck: CompiledKernel, *, grid, block, args: Sequence[Any],
     and the per-warp shared-memory copies fit the budget
     (``flat.choose_warp_exec``); 'serial'/'batched' force either path.
 
+    ``donate=True`` donates the flat global-memory buffers to the
+    executable (buffer reuse instead of copy-on-write); the bound
+    arrays are consumed — note that for already-1-D inputs the flat
+    binding aliases the caller's array, which JAX then deletes.
+    Donation is unsupported on the ``sharded`` backend
+    (``CoxUnsupported``): its replicated cross-device buffers cannot
+    alias a single donated input.
+
     This is the uncached entry point; ``KernelFn.launch`` adds a
-    launch-level compile cache so repeat launches skip retracing.
+    launch-level compile cache (now owned by the stream dispatcher,
+    ``repro.core.streams``) so repeat launches skip retracing.
     """
     plan, exe = build_launcher(ck, grid=grid, block=block, mode=mode,
                                simd=simd, mesh=mesh, axis=axis,
                                backend=backend, chunk=chunk,
-                               warp_exec=warp_exec)
+                               warp_exec=warp_exec, donate=donate)
     globals_, shapes, scalars = plan.bind_args(args)
     out = exe(globals_, scalars)
     return {k: v.reshape(shapes[k]) for k, v in out.items()}

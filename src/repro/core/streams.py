@@ -1,0 +1,615 @@
+"""CUDA streams & events: the async launch-dispatch layer.
+
+CUDA programs overlap independent kernels by issuing them on *streams* —
+in-order launch queues whose cross-stream ordering is constrained only
+by *events* (and by the legacy default stream, which synchronizes with
+everything).  COX's runtime (paper §4) stops at synchronous single-queue
+launches; this module refactors every launch into an explicit
+request/dispatch architecture and builds streams on top:
+
+* :class:`LaunchRequest` — resolved knobs (:class:`~repro.core.runtime.
+  ResolvedLaunch`) plus bound args, the unit the dispatcher consumes.
+  ``api.KernelFn.launch`` is now "build a request, enqueue it on the
+  default stream, dispatch" — the returned arrays stay XLA futures
+  exactly as before the refactor (no host block), one launch path.
+* :class:`Stream` — an in-order launch queue.  ``stream.launch(...)``
+  returns a :class:`LaunchHandle` future immediately; ``.result()``
+  materializes the outputs.
+* :class:`Event` — ``record()`` captures a point in a stream's program
+  order; ``wait(stream)`` makes another stream's *subsequent* launches
+  depend on it; ``synchronize()`` blocks the host; ``elapsed(end)``
+  reports wall-clock milliseconds between two recorded events.
+* :class:`Dispatcher` — the host-side scheduler.  Every flush
+  **topologically orders** the pending requests by stream program order
+  plus event edges and dispatches each staged executable through XLA's
+  async dispatch — no ``block_until_ready`` inside the graph, so the
+  host issues launch *B* while *A* is still executing (stream launches
+  flush eagerly, like a CUDA launch; handles defer only the *wait*).
+  The launch-level executable cache lives here (not on the kernel), so
+  **all streams share staged executables**: identical geometry launched
+  from two streams stages exactly once.
+
+What maps to what (see README "Streams & events" for the full table):
+in-stream order and event edges become host *dispatch order*; overlap
+comes from XLA's async dispatch (a dispatched executable runs while the
+host binds and dispatches the next request).  A single XLA device
+executes one computation at a time, so two streams overlap host work
+with device work — the CUDA H2D/compute-overlap story, not two
+simultaneous device queues.  Buffer donation (``donate=True``) lets an
+in-order stream re-launching over the same globals reuse their buffers
+instead of copying (``jax.jit(..., donate_argnums=...)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import threading
+import time
+import weakref
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from . import runtime as _runtime
+from .types import CoxUnsupported
+
+# staged-executable LRU bound: far above any real working set (every
+# distinct (kernel, geometry, knobs) combination is one entry); evicted
+# entries are simply re-staged on next use
+STAGE_CACHE_SIZE = 1024
+
+# dispatch_log retention: the log is introspection/test surface, not an
+# audit trail — a long-lived serving process must not grow per-launch
+# state, so the log is trimmed to the most recent half once it doubles
+DISPATCH_LOG_MAX = 8192
+
+
+def _is_deleted(x) -> bool:
+    """True for a jax.Array whose buffer was donated away (a later
+    ``donate=True`` launch consumed it).  Deleted outputs are
+    unwaitable — and vacuously complete: deletion happens when a
+    downstream consumer was dispatched, and that consumer's own data
+    dependency covers the producer."""
+    try:
+        return bool(x.is_deleted())
+    except AttributeError:
+        return False
+
+
+def _outputs_ready(outputs: Dict[str, Any]) -> bool:
+    """Non-blocking readiness over an output dict, donation-aware."""
+    try:
+        return all(_is_deleted(o) or o.is_ready() for o in outputs.values())
+    except AttributeError:      # jax without Array.is_ready
+        return True
+
+
+def _block_outputs(outputs: Dict[str, Any]) -> None:
+    """``block_until_ready`` over an output dict, skipping buffers that
+    a donating relaunch already consumed."""
+    for o in outputs.values():
+        if not _is_deleted(o):
+            jax.block_until_ready(o)
+
+
+def _mesh_key(mesh) -> Any:
+    """A hashable stand-in for the mesh in staging-cache keys, built
+    from stable content (axis names/sizes + device ids).  Object
+    identity is NOT a safe key: ``id()`` of a garbage-collected mesh can
+    be recycled by a new mesh, which would then hit a stale executable
+    closed over the old devices."""
+    if mesh is None:
+        return None
+    try:
+        return ("mesh", tuple(mesh.shape.items()),
+                tuple(d.id for d in mesh.devices.flat))
+    except (AttributeError, TypeError):
+        pass
+    try:
+        hash(mesh)
+        return mesh
+    except TypeError:
+        return ("unhashable-mesh", id(mesh), repr(mesh))
+
+
+@dataclasses.dataclass
+class LaunchRequest:
+    """One ``kernel<<<grid, block, stream>>>(*args)`` as data: the
+    resolved launch knobs plus the bound arguments.  This is the unit
+    the :class:`Dispatcher` consumes — ``KernelFn.make_request`` builds
+    one, a :class:`Stream` enqueues it, the dispatcher stages and
+    dispatches it."""
+    ck: Any                      # CompiledKernel
+    token: tuple                 # pass-pipeline cache key (stable per ck)
+    rl: Any                      # runtime.ResolvedLaunch
+    simd: bool
+    chunk: Optional[int]
+    mesh: Any
+    axis: str
+    donate: bool
+    globals_: Optional[Dict[str, Any]]   # dropped after dispatch
+    shapes: Dict[str, tuple]
+    scalars: Optional[Dict[str, Any]]
+    # dispatcher bookkeeping (set at enqueue / dispatch)
+    seq: int = -1
+    stream: Optional["Stream"] = None
+    deps: Tuple[int, ...] = ()
+    outputs: Optional[Dict[str, Any]] = None   # raw flat arrays (futures)
+    dispatched: bool = False
+    error: Optional[BaseException] = None
+
+    def stage_key(self) -> tuple:
+        """The staging-cache key *without* the kernel-identity element
+        (the dispatcher prepends it).  Same layout as the old
+        ``KernelFn._launch_cache`` key — the compile token first, the
+        phase count second — with ``donate`` appended: a donating
+        executable aliases its input buffers and must never be handed a
+        launch that expects copies."""
+        rl = self.rl
+        return (self.token, self.ck.n_phases, rl.backend, rl.mode,
+                rl.grid.astuple(), rl.block.astuple(), rl.n_warps,
+                self.simd, self.chunk, rl.warp_exec, _mesh_key(self.mesh),
+                self.axis, self.donate)
+
+
+class LaunchHandle:
+    """Future for an enqueued launch.  ``.result()`` flushes the
+    dispatcher, blocks until this launch's outputs are ready, and
+    returns them reshaped — the synchronous endpoint.  ``.outputs`` is
+    the async endpoint: it only guarantees the launch has been
+    *dispatched* and hands back the raw flat arrays (still XLA futures),
+    the currency for chaining dependent launches without a host sync."""
+
+    __slots__ = ("_req", "_disp")
+
+    def __init__(self, req: LaunchRequest, disp: "Dispatcher"):
+        self._req = req
+        self._disp = disp
+
+    @property
+    def stream(self) -> "Stream":
+        return self._req.stream
+
+    @property
+    def request(self) -> LaunchRequest:
+        return self._req
+
+    def done(self) -> bool:
+        """True once the launch has been dispatched and its outputs are
+        ready (never blocks)."""
+        req = self._req
+        if req.error is not None:
+            return True
+        if not req.dispatched:
+            return False
+        return _outputs_ready(req.outputs)
+
+    @property
+    def outputs(self) -> Dict[str, Any]:
+        """Raw flat output arrays (async: dispatched, not awaited)."""
+        self._disp.dispatch_through(self._req)
+        if self._req.error is not None:
+            # surfacing the error reclaims the bookkeeping entry, same
+            # as an explicit sync would — no leak on the launch() path
+            self._disp.forget(self._req)
+            raise self._req.error
+        return self._req.outputs
+
+    def _reshaped(self) -> Dict[str, Any]:
+        req = self._req
+        for k, v in req.outputs.items():
+            if _is_deleted(v):
+                raise CoxUnsupported(
+                    f"launch output '{k}' was donated to a later "
+                    f"donate=True launch and its buffer is gone — "
+                    f"materialize the handle before donating its "
+                    f"outputs, or keep the downstream handle instead")
+        return {k: v.reshape(req.shapes[k]) for k, v in req.outputs.items()}
+
+    def arrays(self) -> Dict[str, Any]:
+        """Reshaped outputs *without* a host sync — still XLA futures,
+        exactly what the pre-stream ``KernelFn.launch`` returned.  The
+        launch (and everything it depends on) is dispatched first."""
+        outs = self.outputs      # dispatch + surface this request's error
+        del outs
+        return self._reshaped()
+
+    def result(self) -> Dict[str, Any]:
+        """Materialize: flush, block on this launch, reshape outputs."""
+        self._disp.sync_request(self._req)
+        return self._reshaped()
+
+
+class Stream:
+    """An in-order launch queue (CUDA ``cudaStream_t``).
+
+    Launches enqueued on one stream dispatch in program order; launches
+    on different streams are unordered unless an :class:`Event` edge —
+    or the legacy default stream — connects them.  The **default
+    stream** has CUDA's legacy-sync semantics: a launch on it is ordered
+    after the current tail of *every* stream, and every stream's next
+    launch is ordered after the default stream's tail."""
+
+    _names = itertools.count()
+
+    def __init__(self, name: Optional[str] = None,
+                 dispatcher: Optional["Dispatcher"] = None, *,
+                 _default: bool = False):
+        self._disp = dispatcher if dispatcher is not None else get_dispatcher()
+        self._default = _default
+        self.name = name or ("default" if _default
+                             else f"stream{next(self._names)}")
+        self._wait_deps: List[int] = []   # event edges for the next launch
+
+    def __repr__(self):
+        return f"Stream({self.name!r})"
+
+    @property
+    def is_default(self) -> bool:
+        return self._default
+
+    @property
+    def dispatcher(self) -> "Dispatcher":
+        return self._disp
+
+    def launch(self, kern, *, grid, block, args, **knobs) -> LaunchHandle:
+        """Enqueue ``kern<<<grid, block>>>(*args)`` on this stream and
+        return a :class:`LaunchHandle` immediately.  ``kern`` is an
+        ``api.KernelFn``; ``knobs`` are the usual launch knobs
+        (``backend=``, ``warp_exec=``, ``donate=``, ...).
+
+        Dispatch is **eager**, exactly like a CUDA launch: the request
+        (and anything still pending) goes straight through the
+        dispatcher's topological flush into XLA's async dispatch, so
+        the kernel starts executing while the host issues the next
+        launch — the handle only defers the *wait*, never the work.
+        Enqueue order is always a legal linearization (an event edge
+        requires its ``record`` to precede the ``wait``), so eager
+        dispatch can never violate a dependency."""
+        req = kern.make_request(grid=grid, block=block, args=args, **knobs)
+        handle = self._disp.enqueue(req, self)
+        self._disp.flush()
+        return handle
+
+    def wait_event(self, event: "Event") -> None:
+        """All *subsequent* launches on this stream wait for ``event``
+        (CUDA ``cudaStreamWaitEvent``).  Waiting on an unrecorded event
+        is a no-op, as on CUDA."""
+        event.wait(self)
+
+    def record_event(self, event: Optional["Event"] = None) -> "Event":
+        """Record (a new) event at this stream's current tail."""
+        ev = event if event is not None else Event()
+        ev.record(self)
+        return ev
+
+    def synchronize(self) -> None:
+        """Block the host until every launch enqueued on this stream has
+        completed.  Idempotent — synchronizing an already-idle stream is
+        a no-op."""
+        self._disp.sync_stream(self)
+
+    def _consume_wait_deps(self) -> List[int]:
+        deps, self._wait_deps = self._wait_deps, []
+        return deps
+
+
+class Event:
+    """CUDA-style event: a recorded point in a stream's program order.
+
+    ``record(stream)`` captures the stream's current tail;
+    ``wait(stream)`` orders another stream's subsequent launches after
+    that point; ``synchronize()`` blocks the host until the recorded
+    work completed and stamps the completion time; ``elapsed(end)``
+    returns milliseconds between two events' stamps.  Timing caveat:
+    the stamp is taken when completion is first *observed* (at a
+    ``synchronize()``), not at true device completion — synchronize
+    promptly for tight timings."""
+
+    def __init__(self):
+        self._req: Optional[LaunchRequest] = None
+        self._disp: Optional[Dispatcher] = None
+        self._recorded = False
+        self._t_done: Optional[float] = None
+
+    def record(self, stream: Optional[Stream] = None) -> "Event":
+        stream = stream if stream is not None else get_dispatcher().default
+        self._disp = stream.dispatcher
+        self._req = self._disp.tail_request(stream)   # None: empty stream
+        self._recorded = True
+        # recording on an idle stream completes immediately (CUDA: an
+        # event completes once all preceding stream work has) — stamp now
+        self._t_done = None if self._req is not None else time.perf_counter()
+        return self
+
+    def wait(self, stream: Stream) -> None:
+        if not self._recorded or self._req is None:
+            return                       # CUDA: wait-before-record is a no-op
+        stream._wait_deps.append(self._req.seq)
+
+    def query(self) -> bool:
+        """True when the recorded work has completed (never blocks)."""
+        if not self._recorded:
+            return True
+        if self._req is None:
+            return True
+        if not self._req.dispatched:
+            return False
+        return _outputs_ready(self._req.outputs)
+
+    def synchronize(self) -> "Event":
+        """Block until the recorded work completed; idempotent.  The
+        first call stamps the event's completion time."""
+        if not self._recorded:
+            raise CoxUnsupported("Event.synchronize() before record()")
+        if self._req is not None:
+            self._disp.sync_request(self._req)
+        if self._t_done is None:
+            self._t_done = time.perf_counter()
+        return self
+
+    def elapsed(self, end: "Event") -> float:
+        """Milliseconds between this (start) event and ``end`` — CUDA
+        ``cudaEventElapsedTime``.  Synchronizes both events."""
+        self.synchronize()
+        end.synchronize()
+        return (end._t_done - self._t_done) * 1e3
+
+    elapsed_time = elapsed   # cupy-style alias
+
+
+class Dispatcher:
+    """Host-side launch scheduler + the shared staging cache.
+
+    :meth:`flush` topologically orders the pending request graph —
+    stream program order plus event edges, FIFO (enqueue-order)
+    tie-break — and dispatches each request's staged executable via
+    XLA's **async dispatch**: the ``exe(...)`` call returns futures
+    immediately, so a dispatched kernel executes while the host binds
+    and dispatches later requests.  Stream launches flush eagerly (a
+    CUDA launch starts the kernel, it does not queue it on the host);
+    requests can still sit pending between ``enqueue`` and ``flush``
+    when the dispatcher is driven directly.  Nothing in the dispatch
+    path calls ``block_until_ready``.
+
+    Staged executables are cached here, keyed on kernel identity plus
+    the request's resolved geometry/knobs (``LaunchRequest.stage_key``),
+    so every stream — and the synchronous ``KernelFn.launch`` path —
+    shares one staging per distinct launch shape."""
+
+    def __init__(self, stage_cache_size: int = STAGE_CACHE_SIZE):
+        # _lock guards the queues/caches and is only ever held briefly;
+        # _dispatch_lock serializes whole flush drains so concurrent
+        # flushes cannot interleave dispatch out of dependency order,
+        # while staging (JAX trace/compile) runs with only it held —
+        # other threads' enqueues/syncs never wait on a compile
+        self._lock = threading.RLock()
+        self._dispatch_lock = threading.Lock()
+        self._stage_cache_size = stage_cache_size
+        self._staged: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._pending: "OrderedDict[int, LaunchRequest]" = OrderedDict()
+        self._inflight: Dict[int, LaunchRequest] = {}
+        # stream -> weakref to its tail request.  Both sides are weak on
+        # purpose: a pending/in-flight request is kept alive by
+        # _pending/_inflight (and keeps its stream alive via req.stream),
+        # while a *completed* request whose handle was dropped may be
+        # collected — ordering against completed work is vacuous, so a
+        # dead tail simply means "no edge needed".
+        self._tails: "weakref.WeakKeyDictionary[Stream, Any]" = \
+            weakref.WeakKeyDictionary()
+        self._seq = itertools.count()
+        self.dispatch_log: List[int] = []   # seq order of dispatches
+        self.stage_hits = 0
+        self.stage_misses = 0
+        self.default = Stream(dispatcher=self, _default=True)
+
+    # ---------------- enqueue ----------------
+
+    def enqueue(self, req: LaunchRequest, stream: Stream) -> LaunchHandle:
+        """Assign the request its place in the launch order: program
+        order on its stream, pending event edges, and the default
+        stream's legacy-sync edges."""
+        with self._lock:
+            req.seq = next(self._seq)
+            req.stream = stream
+            deps = []
+            tail = self.tail_request(stream)
+            if tail is not None:
+                deps.append(tail.seq)            # in-order within the stream
+            if stream.is_default:
+                # legacy sync: the default stream is ordered after the
+                # current tail of every other stream
+                for s in list(self._tails):
+                    if s is stream:
+                        continue
+                    t = self._tails[s]()
+                    if t is not None:
+                        deps.append(t.seq)
+            else:
+                dt = self.tail_request(self.default)
+                if dt is not None:
+                    deps.append(dt.seq)          # ...and every stream after it
+            deps.extend(stream._consume_wait_deps())
+            req.deps = tuple(sorted(set(deps)))
+            self._pending[req.seq] = req
+            self._tails[stream] = weakref.ref(req)
+            return LaunchHandle(req, self)
+
+    def tail_request(self, stream: Stream) -> Optional[LaunchRequest]:
+        with self._lock:
+            ref = self._tails.get(stream)
+            return ref() if ref is not None else None
+
+    # ---------------- staging (the shared launch cache) ----------------
+
+    def stage(self, req: LaunchRequest):
+        """Resolve the request to a staged ``(plan, exe)``, shared
+        across streams.  ``id(ck)`` is safe in the key because the
+        cached plan holds a strong reference to the same ck — the id
+        cannot be recycled while the entry lives."""
+        key = (id(req.ck),) + req.stage_key()
+        with self._lock:
+            hit = self._staged.get(key)
+            if hit is not None:
+                self._staged.move_to_end(key)
+                self.stage_hits += 1
+                return hit
+        staged = _runtime.build_resolved(
+            req.ck, req.rl, simd=req.simd, mesh=req.mesh, axis=req.axis,
+            chunk=req.chunk, donate=req.donate)
+        with self._lock:
+            self.stage_misses += 1
+            self._staged[key] = staged
+            while len(self._staged) > self._stage_cache_size:
+                self._staged.popitem(last=False)
+        return staged
+
+    def cache_view(self, cks) -> Dict[tuple, tuple]:
+        """The staged entries for the given compiled kernels, keyed
+        without the kernel-identity element — the backward-compatible
+        ``KernelFn._launch_cache`` shape."""
+        ids = {id(ck) for ck in cks}
+        with self._lock:
+            return {k[1:]: v for k, v in self._staged.items() if k[0] in ids}
+
+    # ---------------- dispatch ----------------
+
+    def _toposorted(self) -> List[LaunchRequest]:
+        """Kahn's algorithm over the pending graph: edges are stream
+        program order + event edges (``req.deps``, restricted to
+        still-pending requests); ties break FIFO by enqueue order, so
+        the dispatch order is deterministic."""
+        pending = self._pending
+        indeg = {seq: sum(1 for d in r.deps if d in pending)
+                 for seq, r in pending.items()}
+        ready = sorted(seq for seq, n in indeg.items() if n == 0)
+        out: List[LaunchRequest] = []
+        fwd: Dict[int, List[int]] = {}
+        for seq, r in pending.items():
+            for d in r.deps:
+                if d in pending:
+                    fwd.setdefault(d, []).append(seq)
+        heapq.heapify(ready)
+        while ready:
+            seq = heapq.heappop(ready)
+            out.append(pending[seq])
+            for nxt in fwd.get(seq, ()):
+                indeg[nxt] -= 1
+                if indeg[nxt] == 0:
+                    heapq.heappush(ready, nxt)
+        if len(out) != len(pending):     # impossible by construction:
+            raise AssertionError("cycle in launch-dependency graph")
+        return out
+
+    def _dispatch(self, req: LaunchRequest) -> None:
+        try:
+            _, exe = self.stage(req)      # may trace/compile — no _lock
+            req.outputs = exe(req.globals_, req.scalars)   # async dispatch
+        except Exception as e:            # surfaces at *this* request's sync
+            req.error = e
+        req.dispatched = True
+        req.globals_ = None               # release (or donated) inputs
+        req.scalars = None
+        with self._lock:
+            self._inflight[req.seq] = req
+            self.dispatch_log.append(req.seq)
+            if len(self.dispatch_log) > 2 * DISPATCH_LOG_MAX:
+                del self.dispatch_log[:-DISPATCH_LOG_MAX]
+
+    def flush(self) -> None:
+        """Dispatch every pending request in topological order.  The
+        drain loop holds only the dispatch lock; the queue lock is
+        taken just to snapshot a batch, so concurrent enqueues (and
+        already-staged launches) never wait on a first-launch compile."""
+        with self._dispatch_lock:
+            while True:
+                with self._lock:
+                    if not self._pending:
+                        break
+                    order = self._toposorted()
+                    self._pending = OrderedDict()
+                for req in order:
+                    self._dispatch(req)
+            with self._lock:
+                self._prune_inflight()
+
+    def dispatch_through(self, req: LaunchRequest) -> None:
+        """Ensure ``req`` (and, by topological order, everything it
+        depends on) has been dispatched."""
+        if not req.dispatched:
+            self.flush()
+
+    def _prune_inflight(self) -> None:
+        for seq in list(self._inflight):
+            r = self._inflight[seq]
+            if r.error is not None:
+                continue                 # kept until its sync re-raises
+            if _outputs_ready(r.outputs):
+                del self._inflight[seq]
+
+    # ---------------- synchronization ----------------
+
+    def forget(self, req: LaunchRequest) -> None:
+        """Drop a request from the in-flight set (its error/result has
+        been surfaced to the caller)."""
+        with self._lock:
+            self._inflight.pop(req.seq, None)
+
+    def sync_request(self, req: LaunchRequest) -> None:
+        """Flush, then block until this request's outputs are ready."""
+        self.dispatch_through(req)
+        self.forget(req)
+        if req.error is not None:
+            raise req.error
+        _block_outputs(req.outputs)
+
+    def _take_inflight(self, stream: Optional[Stream]) -> List[LaunchRequest]:
+        """Atomically remove (and return, seq-ordered) the in-flight
+        requests of ``stream`` — or of every stream when ``None``.  The
+        caller blocks on them *outside* the lock, so concurrent
+        enqueues/flushes never wait on device completion."""
+        with self._lock:
+            taken = []
+            for seq in sorted(self._inflight):
+                r = self._inflight[seq]
+                if stream is None or r.stream is stream:
+                    del self._inflight[seq]
+                    taken.append(r)
+            return taken
+
+    def sync_stream(self, stream: Optional[Stream]) -> None:
+        """Block until every launch enqueued on ``stream`` completed
+        (``None``: on any stream).  The first deferred launch error of
+        the synced set is raised, CUDA's sticky-async-error analogue."""
+        self.flush()
+        errs = []
+        for r in self._take_inflight(stream):
+            if r.error is not None:
+                errs.append(r.error)
+                continue
+            _block_outputs(r.outputs)
+        if errs:
+            raise errs[0]
+
+    def sync_all(self) -> None:
+        """Device-wide barrier (CUDA ``cudaDeviceSynchronize``)."""
+        self.sync_stream(None)
+
+
+# ---------------------------------------------------------------------------
+# module singletons — the process-wide dispatcher and its default stream
+# ---------------------------------------------------------------------------
+
+_DISPATCHER = Dispatcher()
+default_stream = _DISPATCHER.default
+
+
+def get_dispatcher() -> Dispatcher:
+    return _DISPATCHER
+
+
+def synchronize() -> None:
+    """Device-wide barrier over the default dispatcher."""
+    _DISPATCHER.sync_all()

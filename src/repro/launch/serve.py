@@ -4,8 +4,16 @@ Requests enter a fixed-size batch of decode slots; finished sequences
 free their slot for the next queued request (continuous batching).  The
 serve step is the same jitted function the dry-run lowers.
 
+Per-request kernel work rides **cox streams** (`--postproc`): each
+decode slot owns a stream, and a finished request's postprocessing
+kernel (a token histogram here — the stand-in for dedup/stats/safety
+passes) is *enqueued* on its slot's stream and left in flight while the
+server keeps decoding.  Independent requests' kernels overlap with each
+other and with the decode steps; everything is synchronized once at the
+end (``RequestKernelPool.collect``).
+
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m-smoke \
-        --batch 4 --ctx 128 --requests 8 --tokens 16
+        --batch 4 --ctx 128 --requests 8 --tokens 16 --postproc
 """
 from __future__ import annotations
 
@@ -19,10 +27,50 @@ import numpy as np
 
 from ..configs import registry
 from ..configs.base import ShapeConfig
+from ..core import cox
 from ..models.params import init_params
 from ..parallel import steps as steps_mod
 from .mesh import make_host_mesh
 from . import specs as S
+
+
+@cox.kernel
+def _token_hist(c, hist: cox.Array(cox.i32), toks: cox.Array(cox.i32),
+                n: cox.i32, nbins: cox.i32):
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    if i < n:
+        c.atomic_add(hist, toks[i] % nbins, 1)
+
+
+class RequestKernelPool:
+    """Per-request kernel postprocessing on per-slot cox streams.
+
+    ``submit`` enqueues the request's kernel on its slot's stream and
+    returns immediately (the handle is a future — XLA async dispatch);
+    the serving loop never blocks on postprocessing.  ``collect``
+    synchronizes every stream once, at the end."""
+
+    def __init__(self, n_slots: int, nbins: int = 64):
+        self.nbins = nbins
+        self.streams = [cox.Stream(name=f"req-slot{i}")
+                        for i in range(n_slots)]
+        self.handles: List[cox.LaunchHandle] = []
+
+    def submit(self, slot: int, tokens: List[int]) -> None:
+        toks = np.asarray(tokens, np.int32)
+        n = int(toks.size)
+        if n == 0:
+            return
+        block = 64
+        h = self.streams[slot].launch(
+            _token_hist, grid=-(-n // block), block=block,
+            args=(np.zeros(self.nbins, np.int32), toks, n, self.nbins))
+        self.handles.append(h)
+
+    def collect(self) -> List[np.ndarray]:
+        """Synchronize all streams and return each request's histogram
+        (in completion order)."""
+        return [np.asarray(h.result()["hist"]) for h in self.handles]
 
 
 class BatchedServer:
@@ -92,10 +140,17 @@ class BatchedServer:
 
 
 def serve_requests(arch: str, *, batch: int, ctx: int, n_requests: int,
-                   max_tokens: int, seed: int = 0) -> Dict[str, Any]:
-    """Continuous batching over a queue of synthetic prompt requests."""
+                   max_tokens: int, seed: int = 0,
+                   postproc: bool = False) -> Dict[str, Any]:
+    """Continuous batching over a queue of synthetic prompt requests.
+
+    With ``postproc=True`` every finished request's token histogram is
+    issued on that slot's cox stream and left in flight — per-request
+    kernel work overlaps across requests and with subsequent decode
+    steps; one synchronize at the end collects everything."""
     rng = np.random.default_rng(seed)
     server = BatchedServer(arch, batch=batch, ctx=ctx, seed=seed)
+    pool = RequestKernelPool(batch) if postproc else None
     queue = [list(rng.integers(1, server.cfg.vocab, size=8))
              for _ in range(n_requests)]
     done: List[List[int]] = []
@@ -108,11 +163,24 @@ def serve_requests(arch: str, *, batch: int, ctx: int, n_requests: int,
         for slot in range(batch):
             if not server.active[slot] and server.outputs[slot]:
                 done.append(server.outputs[slot])
+                if pool is not None:
+                    pool.submit(slot, server.outputs[slot])
                 server.outputs[slot] = []
+    out: Dict[str, Any] = {}
+    if pool is not None:
+        hists = pool.collect()          # one sync for all streams
+        out["postproc"] = {
+            "requests": len(hists),
+            "hist_tokens": int(sum(int(h.sum()) for h in hists)),
+        }
     dt = time.time() - t0
     total_tokens = sum(len(o) for o in done)
-    return {"completed": len(done), "tokens": total_tokens,
-            "wall_s": dt, "tok_per_s": total_tokens / max(dt, 1e-9)}
+    out.update({"completed": len(done), "tokens": total_tokens,
+                "wall_s": dt, "tok_per_s": total_tokens / max(dt, 1e-9)})
+    if pool is not None:
+        # the histograms were binned from exactly the emitted tokens
+        assert out["postproc"]["hist_tokens"] == total_tokens
+    return out
 
 
 def main():
@@ -122,11 +190,19 @@ def main():
     ap.add_argument("--ctx", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--postproc", action="store_true",
+                    help="per-request postprocess kernels on per-slot "
+                         "cox streams (overlapped, one final sync)")
     args = ap.parse_args()
     out = serve_requests(args.arch, batch=args.batch, ctx=args.ctx,
-                         n_requests=args.requests, max_tokens=args.tokens)
-    print(f"served {out['completed']} requests, {out['tokens']} tokens, "
-          f"{out['tok_per_s']:.1f} tok/s")
+                         n_requests=args.requests, max_tokens=args.tokens,
+                         postproc=args.postproc)
+    msg = (f"served {out['completed']} requests, {out['tokens']} tokens, "
+           f"{out['tok_per_s']:.1f} tok/s")
+    if args.postproc:
+        msg += (f" (+{out['postproc']['requests']} postproc kernels, "
+                f"{out['postproc']['hist_tokens']} tokens binned)")
+    print(msg)
 
 
 if __name__ == "__main__":

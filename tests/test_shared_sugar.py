@@ -1,0 +1,139 @@
+"""dim3 shared-memory indexing sugar: `tile[ty][tx]` chained subscripts.
+
+Real SDK sources declare `__shared__ float tile[16][17]` and index it
+`tile[ty][tx]`; the frontend lowers chained subscripts on `c.shared`
+arrays to the same row-major linearization as the tuple spelling
+`tile[ty, tx]`, so the two forms compile to identical programs.
+"""
+import os
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.core import cox  # noqa: E402
+from repro.core.oracle import run_grid as oracle_run  # noqa: E402
+from repro.core.types import CoxUnsupported  # noqa: E402
+
+
+@cox.kernel
+def _transpose_chained(c, o: cox.Array(cox.f32), i: cox.Array(cox.f32),
+                       n: cox.i32):
+    tile = c.shared((16, 17), cox.f32)
+    x = c.block_idx('x') * 16 + c.thread_idx('x')
+    y = c.block_idx('y') * 16 + c.thread_idx('y')
+    tile[c.thread_idx('y')][c.thread_idx('x')] = i[y * n + x]
+    c.syncthreads()
+    o[(c.block_idx('x') * 16 + c.thread_idx('y')) * n
+      + c.block_idx('y') * 16 + c.thread_idx('x')] = \
+        tile[c.thread_idx('x')][c.thread_idx('y')]
+
+
+@cox.kernel
+def _transpose_tuple(c, o: cox.Array(cox.f32), i: cox.Array(cox.f32),
+                     n: cox.i32):
+    tile = c.shared((16, 17), cox.f32)
+    x = c.block_idx('x') * 16 + c.thread_idx('x')
+    y = c.block_idx('y') * 16 + c.thread_idx('y')
+    tile[c.thread_idx('y'), c.thread_idx('x')] = i[y * n + x]
+    c.syncthreads()
+    o[(c.block_idx('x') * 16 + c.thread_idx('y')) * n
+      + c.block_idx('y') * 16 + c.thread_idx('x')] = \
+        tile[c.thread_idx('x'), c.thread_idx('y')]
+
+
+def _transpose_args(n=64, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.standard_normal((n * n,)).astype(np.float32)
+    return (np.zeros(n * n, np.float32), src, np.int32(n)), src
+
+
+def test_chained_equals_tuple_ir():
+    """Both spellings lower to the identical kernel IR body."""
+    assert repr(_transpose_chained.ir.body) == repr(_transpose_tuple.ir.body)
+
+
+@pytest.mark.parametrize("backend", ["scan", "vmap"])
+@pytest.mark.parametrize("warp_exec", ["serial", "batched"])
+def test_chained_transpose_matches_tuple_and_oracle(backend, warp_exec):
+    n = 64
+    args, src = _transpose_args(n)
+    kw = dict(grid=(n // 16, n // 16), block=(16, 16), args=args)
+    got = _transpose_chained.launch(backend=backend, warp_exec=warp_exec,
+                                    **kw)
+    want = _transpose_tuple.launch(backend=backend, warp_exec=warp_exec,
+                                   **kw)
+    np.testing.assert_array_equal(np.asarray(got["o"]),
+                                  np.asarray(want["o"]))
+    np.testing.assert_array_equal(
+        np.asarray(got["o"]).reshape(n, n),
+        src.reshape(n, n).T)
+    ref = oracle_run(_transpose_chained.ir, grid=(n // 16, n // 16),
+                     block=(16, 16), args=args)
+    np.testing.assert_array_equal(np.asarray(got["o"]),
+                                  np.asarray(ref["o"], np.float32))
+
+
+def test_chained_3d_and_augassign():
+    @cox.kernel
+    def k3(c, o: cox.Array(cox.f32), n: cox.i32):
+        buf = c.shared((2, 3, 4), cox.f32)
+        t = c.thread_idx()
+        z = t // 12
+        rem = t % 12
+        y = rem // 4
+        x = rem % 4
+        if t < 24:
+            buf[z][y][x] = c.f32(t)
+            buf[z][y][x] += 1.0
+        c.syncthreads()
+        if t < 24:
+            o[t] = buf[z][y][x]
+
+    out = k3.launch(grid=1, block=32, args=(np.zeros(24, np.float32), 24))
+    np.testing.assert_array_equal(np.asarray(out["o"]),
+                                  np.arange(24, dtype=np.float32) + 1.0)
+
+
+def test_chained_on_global_rejected():
+    with pytest.raises(CoxUnsupported, match="chained"):
+        @cox.kernel
+        def bad(c, o: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+            o[c.thread_idx()] = a[0][1]
+
+
+def test_chained_rank_mismatch_rejected():
+    with pytest.raises(CoxUnsupported, match="rank"):
+        @cox.kernel
+        def bad(c, o: cox.Array(cox.f32)):
+            tile = c.shared((4, 4), cox.f32)
+            tile[0][1][2] = 1.0
+            o[0] = tile[0, 0]
+
+
+def test_mixed_tuple_and_chain_rejected():
+    with pytest.raises(CoxUnsupported, match="mixing"):
+        @cox.kernel
+        def bad(c, o: cox.Array(cox.f32)):
+            cube = c.shared((2, 3, 4), cox.f32)
+            cube[0, 1][2] = 1.0
+            o[0] = cube[0, 0, 0]
+
+
+def test_linear_index_on_2d_shared_still_works():
+    """The pre-sugar escape hatch — a single linear index into a 2-D
+    tile — keeps its meaning."""
+    @cox.kernel
+    def lin(c, o: cox.Array(cox.f32)):
+        tile = c.shared((4, 4), cox.f32)
+        t = c.thread_idx()
+        if t < 16:
+            tile[t] = c.f32(t) * 2.0
+        c.syncthreads()
+        if t < 16:
+            o[t] = tile[t // 4][t % 4]
+
+    out = lin.launch(grid=1, block=32, args=(np.zeros(16, np.float32),))
+    np.testing.assert_array_equal(np.asarray(out["o"]),
+                                  np.arange(16, dtype=np.float32) * 2.0)
