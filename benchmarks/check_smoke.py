@@ -17,9 +17,14 @@ by diffing the smoke output against the committed baseline
 * the ``streams`` section produced its overlap cells (every pipeline
   depth, sane timings, bitwise equality asserted in-process) in the
   smoke run, and the committed baseline carries the full-run cells —
-  including the two-kernel pair's recorded overlap ratio.
+  including the two-kernel pair's recorded overlap ratio;
+* the ``graph_replay`` section produced its capture/replay cells at
+  every chain depth (replay-vs-eager bitwise equality asserted
+  in-process) in both smoke and baseline, and the committed baseline's
+  deepest chain shows replay actually beating per-launch dispatch
+  (``speedup_x >= 1.5`` at depth 16) — the tentpole perf claim.
 
-Usage: ``python benchmarks/check_smoke.py BENCH_SMOKE.json BENCH_PR5.json``
+Usage: ``python benchmarks/check_smoke.py BENCH_SMOKE.json BENCH_PR6.json``
 """
 
 from __future__ import annotations
@@ -30,12 +35,14 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.run import SWEEP_SMOKE_PICKS  # noqa: E402
+from benchmarks.run import GRAPH_DEPTHS, SWEEP_SMOKE_PICKS  # noqa: E402
 
 REQUIRED_CELLS = ("scan_serial", "scan_batched", "vmap_serial", "vmap_batched")
 NOAVX_CELLS = ("scan_serial_noavx", "scan_batched_noavx")
 STREAM_DEPTHS = (1, 2, 4)  # pipeline depths every run must cover
 STREAM_FIELDS = ("serial_us", "stream_us", "overlap_x")
+GRAPH_FIELDS = ("eager_us", "replay_us", "speedup_x")
+GRAPH_MIN_SPEEDUP = 1.5  # baseline deepest-chain replay-vs-eager floor
 
 
 def fail(msg: str) -> None:
@@ -94,11 +101,15 @@ def main(argv: list[str]) -> None:
             fail(f"{kernel}: CSV row missing from the smoke output")
 
     check_streams(smoke, baseline, row_names)
+    check_graph(smoke, baseline, row_names)
 
     print(
         f"check_smoke: OK — {len(SWEEP_SMOKE_PICKS)} kernels × "
         f"{len(REQUIRED_CELLS)}+ cells present; streams cells × "
-        f"{len(STREAM_DEPTHS)} depths present; equality asserts ran in-process"
+        f"{len(STREAM_DEPTHS)} depths present; graph_replay cells × "
+        f"{len(GRAPH_DEPTHS)} depths present (baseline depth-"
+        f"{max(GRAPH_DEPTHS)} speedup ≥ {GRAPH_MIN_SPEEDUP}x); "
+        f"equality asserts ran in-process"
     )
 
 
@@ -125,6 +136,41 @@ def check_streams(smoke: dict, baseline: dict, row_names: set) -> None:
     for depth in STREAM_DEPTHS:
         if f"streams.pair_depth{depth}" not in row_names:
             fail(f"streams.pair_depth{depth}: CSV row missing from smoke output")
+
+
+def check_graph(smoke: dict, baseline: dict, row_names: set) -> None:
+    if "graph_replay" not in smoke.get("sections", []):
+        fail(f"smoke run missed the graph_replay section: {smoke.get('sections')}")
+    for tag, payload in (("smoke", smoke), ("baseline", baseline)):
+        by_depth = {e.get("depth"): e for e in payload.get("graph_replay", [])}
+        missing = [d for d in GRAPH_DEPTHS if d not in by_depth]
+        if missing:
+            fail(
+                f"{tag}: graph_replay cells missing depths {missing} "
+                f"(present: {sorted(by_depth)})"
+            )
+        for depth in GRAPH_DEPTHS:
+            entry = by_depth[depth]
+            for field in GRAPH_FIELDS:
+                value = entry.get(field)
+                if not isinstance(value, (int, float)) or value <= 0:
+                    fail(
+                        f"{tag}: graph_replay depth {depth}: field {field!r} "
+                        f"missing or non-positive ({value!r})"
+                    )
+    # the tentpole perf claim, checked on the committed full run (smoke
+    # runs 1 iteration — too noisy to gate a ratio on)
+    deepest = max(GRAPH_DEPTHS)
+    base_deep = {e["depth"]: e for e in baseline["graph_replay"]}[deepest]
+    if base_deep["speedup_x"] < GRAPH_MIN_SPEEDUP:
+        fail(
+            f"baseline graph_replay depth {deepest}: replay speedup "
+            f"{base_deep['speedup_x']}x < {GRAPH_MIN_SPEEDUP}x — "
+            f"capture/replay no longer beats per-launch dispatch"
+        )
+    for depth in GRAPH_DEPTHS:
+        if f"graph_replay.chain_depth{depth}" not in row_names:
+            fail(f"graph_replay.chain_depth{depth}: CSV row missing from smoke")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` also
 writes every row (plus the structured backend-sweep matrix) to a
-machine-readable JSON file (default path ``BENCH_PR3.json``) so the
+machine-readable JSON file (default path ``BENCH_PR6.json``) so the
 perf trajectory is recorded across PRs.  ``--sections a,b`` runs a
 subset; ``--smoke`` is the CI regression guard (1 timing iteration,
 flagship kernels only).
@@ -17,6 +17,9 @@ flagship kernels only).
   streams       — async launch dispatch: two independent memory-bound
                   kernels on two cox streams vs serial issue, bitwise
                   equality asserted + overlap ratio per pipeline depth
+  graph_replay  — CUDA graphs: a depth-d chain of dependent launches
+                  captured once into a cox.Graph and replayed per token
+                  vs eager per-launch dispatch, bitwise asserted
   scalability   — Fig. 14: blocks across host devices (subprocess, 8 dev)
   roofline      — §Roofline terms from results/dryrun_all.json (if present)
 """
@@ -46,6 +49,11 @@ SMOKE = False
 RESULTS = []         # every CSV row, as dicts
 SWEEP_RESULTS = []   # structured backend_sweep matrix
 STREAM_RESULTS = []  # structured streams-overlap cells
+GRAPH_RESULTS = []   # structured graph-replay cells
+
+# chain depths every graph_replay run must cover — module-level so the
+# CI regression gate (benchmarks/check_smoke.py) can assert coverage
+GRAPH_DEPTHS = (1, 4, 16)
 
 # backend_sweep kernel picks — module-level so the CI regression gate
 # (benchmarks/check_smoke.py) can assert the smoke run covered them
@@ -400,6 +408,90 @@ def streams():
 # ---------------------------------------------------------------------------
 
 
+def graph_replay():
+    """CUDA graphs: a depth-d chain of *dependent* saxpy launches (one
+    token's worth of pipeline work) dispatched eagerly — d per-launch
+    bind/stage/dispatch round-trips through the stream — vs captured
+    once into a ``cox.Graph`` and **replayed** per token with the
+    carried input rebound (``replay(x=...)``).  Replay is one staged
+    XLA call regardless of depth (XLA fused across the launch
+    boundaries at instantiate), so the win grows with chain depth —
+    the ``cudaGraphLaunch`` story.  Bitwise equality of replay vs
+    eager is asserted on carried state before any timing."""
+    import gc
+    from repro.core import cox
+
+    @cox.kernel
+    def graphStep(c, out: cox.Array(cox.f32), x: cox.Array(cox.f32),
+                  y: cox.Array(cox.f32), n: cox.i32):
+        i = c.block_idx() * c.block_dim() + c.thread_idx()
+        if i < n:
+            out[i] = 0.5 * x[i] + y[i]
+
+    grid, block = 32, 256
+    n = grid * block
+    x0 = np.arange(n, dtype=np.float32) / n
+    y = np.ones(n, np.float32)
+    o = np.zeros(n, np.float32)
+    s = cox.Stream("bench-graph")
+
+    def chain(depth, x):
+        h = s.launch(graphStep, grid=grid, block=block, args=(o, x, y, n))
+        for _ in range(depth - 1):
+            h = s.launch(graphStep, grid=grid, block=block,
+                         args=(o, h.outputs["out"], y, n))
+        return h
+
+    # medians need many alternated samples (same rationale as streams)
+    iters = 1 if SMOKE else max(ITERS * 12, 120)
+    for depth in GRAPH_DEPTHS:
+        g = cox.Graph(name=f"bench-chain{depth}")
+        with g.capture(s):
+            chain(depth, x0)
+        exe = g.instantiate()
+
+        def eager(x, depth=depth):
+            return np.asarray(chain(depth, x).result()["out"])
+
+        def replay(x, exe=exe):
+            return np.asarray(exe.replay(x=x)["out"])
+
+        # bitwise: replayed graph == eager launches, carried three deep
+        xe, xg = x0, x0
+        for _ in range(3):
+            xe, xg = eager(xe), replay(xg)
+            np.testing.assert_array_equal(xg, xe)
+
+        gc.disable()
+        try:
+            te, tg = [], []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                eager(x0)
+                te.append(time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                replay(x0)
+                tg.append(time.perf_counter() - t0)
+        finally:
+            gc.enable()
+        eager_us = statistics.median(te) * 1e6
+        replay_us = statistics.median(tg) * 1e6
+        ratio = eager_us / replay_us
+        _row(f"graph_replay.chain_depth{depth}", replay_us,
+             f"eager_us={eager_us:.1f};speedup={ratio:.2f}x;"
+             f"kernel=graphStep;n={n}")
+        GRAPH_RESULTS.append({
+            "kernel": "graphStep", "depth": depth, "grid": grid,
+            "block": block, "n": n,
+            "eager_us": round(eager_us, 1),
+            "replay_us": round(replay_us, 1),
+            "speedup_x": round(ratio, 2),
+        })
+
+
+# ---------------------------------------------------------------------------
+
+
 def scalability():
     """Fig. 14: multi-block kernels across host devices (8-dev subprocess
     — device count must be set before jax initializes)."""
@@ -446,6 +538,7 @@ SECTIONS = {
     "jit_mode": jit_mode,
     "backend_sweep": backend_sweep,
     "streams": streams,
+    "graph_replay": graph_replay,
     "scalability": scalability,
     "roofline": roofline,
 }
@@ -454,10 +547,10 @@ SECTIONS = {
 def main(argv=None) -> None:
     global WARMUP, ITERS, SMOKE
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--json", nargs="?", const="BENCH_PR5.json", default=None,
+    p.add_argument("--json", nargs="?", const="BENCH_PR6.json", default=None,
                    metavar="PATH",
                    help="write machine-readable results (default path "
-                        "BENCH_PR5.json when the flag is given bare)")
+                        "BENCH_PR6.json when the flag is given bare)")
     p.add_argument("--sections", default=None,
                    help=f"comma-separated subset of {sorted(SECTIONS)}")
     p.add_argument("--smoke", action="store_true",
@@ -482,6 +575,7 @@ def main(argv=None) -> None:
             "rows": RESULTS,
             "backend_sweep": SWEEP_RESULTS,
             "streams": STREAM_RESULTS,
+            "graph_replay": GRAPH_RESULTS,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -23,11 +23,13 @@ from . import streams as _streams
 from .backends.plan import bind_kernel_args, check_donate_supported
 from .execute import CompiledKernel, compile_kernel
 from .frontend import Array, parse_kernel  # noqa: F401  (cox.Array re-export)
+from .graphs import (Graph, GraphExec,  # noqa: F401  (cox.Graph capture API)
+                     GraphNodeHandle)
 from .streams import (Event, default_stream, synchronize,  # noqa: F401
                       LaunchHandle, Stream, get_dispatcher)
 from .streams import _mesh_key  # noqa: F401  (compat re-export for tests)
 from .types import (CoxUnsupported, DType, Dim3, WARP_SIZE,  # noqa: F401
-                    as_dim3)  # Dim3 re-exported: cox.Dim3 launch geometry
+                    GraphRef, as_dim3)  # Dim3 re-exported: launch geometry
 
 # dtype shorthands (annotation + c.shared dtype arguments)
 f32 = DType.f32

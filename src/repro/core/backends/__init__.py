@@ -1,7 +1,10 @@
 """Pluggable grid-execution backends for the COX launcher.
 
 A backend turns a :class:`~repro.core.backends.plan.LaunchPlan` into a
-jitted ``exe(globals_, scalars) -> globals_`` callable:
+jitted ``exe(globals_, scalars) -> globals_`` callable via ``build``,
+and exposes the same launcher un-jitted via ``build_fn`` so the graph
+tracer (``repro.core.graphs``) can inline whole launches into one fused
+XLA program:
 
 * ``scan``    — loop-carried baseline: one ``lax.scan`` over block ids
                 (minimal memory, fully serialized grid);

@@ -90,15 +90,14 @@ def run_phase_wave(plan: LaunchPlan, fn, bids, globals_, scalars, state,
     return g, wrote, dsum, st2
 
 
-def build(plan: LaunchPlan, mesh=None, axis: str = "data",
-          donate: bool = False):
-    """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher.
-    ``donate=True`` donates the globals dict (argnum 0) — every input
-    buffer aliases its same-shape output, so the chunked merge carry
-    starts in place instead of on a copy."""
+def build_fn(plan: LaunchPlan, mesh=None, axis: str = "data"):
+    """Return the *raw* traceable ``run(globals_, scalars) -> globals_``
+    launcher — the un-jitted form the graph tracer (``repro.core.
+    graphs``) inlines into one fused program.  :func:`build` wraps it in
+    ``jax.jit`` for standalone dispatch."""
     plan.check_mergeable(name)
     if plan.n_phases > 1:
-        return _build_phased(plan, donate=donate)
+        return _build_phased_fn(plan)
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
                              simd=plan.simd, track_writes=True,
                              warp_exec=plan.warp_exec,
@@ -110,10 +109,20 @@ def build(plan: LaunchPlan, mesh=None, axis: str = "data",
                               fold_deltas=True)
         return g
 
-    return jax.jit(run, donate_argnums=(0,) if donate else ())
+    return run
 
 
-def _build_phased(plan: LaunchPlan, donate: bool = False):
+def build(plan: LaunchPlan, mesh=None, axis: str = "data",
+          donate: bool = False):
+    """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher.
+    ``donate=True`` donates the globals dict (argnum 0) — every input
+    buffer aliases its same-shape output, so the chunked merge carry
+    starts in place instead of on a copy."""
+    return jax.jit(build_fn(plan, mesh=mesh, axis=axis),
+                   donate_argnums=(0,) if donate else ())
+
+
+def _build_phased_fn(plan: LaunchPlan):
     """Cooperative launch: one all-resident vmap wave per phase, globals
     merged (single-writer select + summed atomic deltas) at every phase
     boundary so phase *p+1* observes all of phase *p*'s writes."""
@@ -128,4 +137,4 @@ def _build_phased(plan: LaunchPlan, donate: bool = False):
                                             state, fold_deltas=True)
         return g
 
-    return jax.jit(run, donate_argnums=(0,) if donate else ())
+    return run

@@ -17,7 +17,7 @@ import numpy as np
 from .. import kernel_ir as K
 from ..execute import CompiledKernel, make_block_fn, walk_instrs
 from ..types import (COOP_MAX_RESIDENT_BLOCKS, ArraySpec, CoxUnsupported,
-                     Dim3, DType, as_dim3, check_launch_geometry)
+                     Dim3, DType, GraphRef, as_dim3, check_launch_geometry)
 
 DEFAULT_CHUNK = 8  # blocks run simultaneously per vmap step
 
@@ -42,7 +42,14 @@ def bind_kernel_args(ck: CompiledKernel, args: Sequence[Any]
     """Split positional args into (globals dict, shapes, scalar
     uniforms); arrays are flattened (CUDA pointer semantics).  A module
     function (not only a plan method) because the stream dispatch layer
-    binds args at *enqueue* time, before any plan is staged."""
+    binds args at *enqueue* time, before any plan is staged.
+
+    A :class:`~repro.core.types.GraphRef` (a captured launch's output
+    placeholder, only meaningful during stream capture) binds
+    symbolically: its shape is recorded and the value passes through
+    untouched for the graph tracer to resolve — the dtype cast and
+    flatten happen *inside* the staged graph program, exactly where the
+    eager path does them outside it."""
     if len(args) != len(ck.kernel.params):
         raise TypeError(f"kernel {ck.kernel.name} takes "
                         f"{len(ck.kernel.params)} args, "
@@ -52,10 +59,20 @@ def bind_kernel_args(ck: CompiledKernel, args: Sequence[Any]
     scalars: Dict[str, Any] = {}
     for spec, val in zip(ck.kernel.params, args):
         if isinstance(spec, ArraySpec):
+            if isinstance(val, GraphRef):
+                shapes[spec.name] = tuple(val.shape)
+                globals_[spec.name] = val
+                continue
             arr = jnp.asarray(val, spec.dtype.jnp)
             shapes[spec.name] = arr.shape
             globals_[spec.name] = arr.reshape(-1)
         else:
+            if isinstance(val, GraphRef):
+                raise CoxUnsupported(
+                    f"kernel {ck.kernel.name}: scalar parameter "
+                    f"'{spec.name}' bound to a captured array output "
+                    f"({val!r}) — graph data edges carry global-memory "
+                    f"arrays, not by-value uniforms")
             scalars[spec.name] = jnp.asarray(val, spec.dtype.jnp)
     return globals_, shapes, scalars
 

@@ -24,14 +24,13 @@ from .plan import LaunchPlan
 name = "scan"
 
 
-def build(plan: LaunchPlan, mesh=None, axis: str = "data",
-          donate: bool = False):
-    """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher.
-    ``donate=True`` donates the globals dict (argnum 0): every input
-    buffer has a same-shape output to alias, so XLA reuses it in place
-    instead of copying — the caller must treat the inputs as consumed."""
+def build_fn(plan: LaunchPlan, mesh=None, axis: str = "data"):
+    """Return the *raw* traceable ``run(globals_, scalars) -> globals_``
+    launcher — the un-jitted form the graph tracer (``repro.core.
+    graphs``) inlines into one fused program.  :func:`build` wraps it in
+    ``jax.jit`` for standalone dispatch."""
     if plan.n_phases > 1:
-        return _build_phased(plan, donate=donate)
+        return _build_phased_fn(plan)
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
                              simd=plan.simd, warp_exec=plan.warp_exec,
                              block_dim=plan.block_dim, grid_dim=plan.grid_dim)
@@ -45,10 +44,20 @@ def build(plan: LaunchPlan, mesh=None, axis: str = "data",
                         jnp.arange(plan.grid, dtype=jnp.int32))
         return g
 
-    return jax.jit(run, donate_argnums=(0,) if donate else ())
+    return run
 
 
-def _build_phased(plan: LaunchPlan, donate: bool = False):
+def build(plan: LaunchPlan, mesh=None, axis: str = "data",
+          donate: bool = False):
+    """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher.
+    ``donate=True`` donates the globals dict (argnum 0): every input
+    buffer has a same-shape output to alias, so XLA reuses it in place
+    instead of copying — the caller must treat the inputs as consumed."""
+    return jax.jit(build_fn(plan, mesh=mesh, axis=axis),
+                   donate_argnums=(0,) if donate else ())
+
+
+def _build_phased_fn(plan: LaunchPlan):
     fns = plan.block_fns(track_writes=False)
     bids = jnp.arange(plan.grid, dtype=jnp.int32)
 
@@ -65,4 +74,4 @@ def _build_phased(plan: LaunchPlan, donate: bool = False):
             g, state = lax.scan(step, g, (bids, state))
         return g
 
-    return jax.jit(run, donate_argnums=(0,) if donate else ())
+    return run

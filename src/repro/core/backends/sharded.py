@@ -25,16 +25,16 @@ from .plan import LaunchPlan, check_donate_supported
 name = "sharded"
 
 
-def build(plan: LaunchPlan, mesh=None, axis: str = "data",
-          donate: bool = False):
-    """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher."""
+def build_fn(plan: LaunchPlan, mesh=None, axis: str = "data"):
+    """Return the *raw* traceable ``run(globals_, scalars) -> globals_``
+    launcher — the un-jitted form the graph tracer (``repro.core.
+    graphs``) inlines into one fused program.  :func:`build` wraps it in
+    ``jax.jit`` for standalone dispatch."""
     if mesh is None:
         raise ValueError("the sharded backend needs a mesh")
-    if donate:
-        check_donate_supported(name, plan.ck.kernel.name)
     plan.check_mergeable(name)
     if plan.n_phases > 1:
-        return _build_phased(plan, mesh, axis)
+        return _build_phased_fn(plan, mesh, axis)
     ndev = mesh.shape[axis]
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
                              simd=plan.simd, track_writes=True,
@@ -57,10 +57,18 @@ def build(plan: LaunchPlan, mesh=None, axis: str = "data",
     def run(globals_, scalars):
         return fn(bid_table, globals_, scalars)
 
-    return jax.jit(run)
+    return run
 
 
-def _build_phased(plan: LaunchPlan, mesh, axis: str):
+def build(plan: LaunchPlan, mesh=None, axis: str = "data",
+          donate: bool = False):
+    """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher."""
+    if donate:
+        check_donate_supported(name, plan.ck.kernel.name)
+    return jax.jit(build_fn(plan, mesh=mesh, axis=axis))
+
+
+def _build_phased_fn(plan: LaunchPlan, mesh, axis: str):
     """Cooperative launch over a mesh: each device keeps its slice of
     the grid resident across the whole phase sequence (per-block carried
     state never leaves its device — blocks are pinned, the bid table is
@@ -95,4 +103,4 @@ def _build_phased(plan: LaunchPlan, mesh, axis: str):
     def run(globals_, scalars):
         return fn(bid_table, globals_, scalars)
 
-    return jax.jit(run)
+    return run

@@ -85,6 +85,21 @@ def resolve_launch(ck: CompiledKernel, *, grid, block,
     return ResolvedLaunch(grid3, block3, bname, mode, warp_exec, n_warps)
 
 
+def build_traceable(ck: CompiledKernel, rl: ResolvedLaunch, *,
+                    simd: bool = True, mesh: Optional[Mesh] = None,
+                    axis: str = "data", chunk: Optional[int] = None):
+    """Build the plan and the *raw* (un-jitted) launcher for an
+    already-resolved launch.  Returns ``(plan, fn)`` with
+    ``fn(globals_, scalars) -> {name: flat array}`` traceable inside a
+    larger jitted program — the form ``repro.core.graphs`` inlines when
+    staging a captured launch DAG as one fused executable."""
+    plan = LaunchPlan.build(ck, grid=rl.grid, block=rl.block, mode=rl.mode,
+                            simd=simd, chunk=chunk, warp_exec=rl.warp_exec)
+    fn = _backends.get_backend(rl.backend).build_fn(plan, mesh=mesh,
+                                                    axis=axis)
+    return plan, fn
+
+
 def build_resolved(ck: CompiledKernel, rl: ResolvedLaunch, *,
                    simd: bool = True, mesh: Optional[Mesh] = None,
                    axis: str = "data", chunk: Optional[int] = None,

@@ -47,13 +47,13 @@ import itertools
 import threading
 import time
 import weakref
-from collections import OrderedDict
-from typing import Any, Dict, List, Optional, Tuple
+from collections import OrderedDict, deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 
 from . import runtime as _runtime
-from .types import CoxUnsupported
+from .types import CoxUnsupported, GraphRef
 
 # staged-executable LRU bound: far above any real working set (every
 # distinct (kernel, geometry, knobs) combination is one entry); evicted
@@ -62,7 +62,8 @@ STAGE_CACHE_SIZE = 1024
 
 # dispatch_log retention: the log is introspection/test surface, not an
 # audit trail — a long-lived serving process must not grow per-launch
-# state, so the log is trimmed to the most recent half once it doubles
+# state, so the log is a bounded ``deque(maxlen=...)`` holding only the
+# most recent dispatches (older entries fall off structurally)
 DISPATCH_LOG_MAX = 8192
 
 
@@ -140,6 +141,18 @@ class LaunchRequest:
     dispatched: bool = False
     error: Optional[BaseException] = None
 
+    def fn_key(self) -> tuple:
+        """Everything that determines the request's *traced program* —
+        the raw launcher's identity, shared between eager staging and
+        graph staging.  Donation is a jit-wrapper property (buffer
+        aliasing), not a trace property, so it lives only in
+        :meth:`stage_key`."""
+        rl = self.rl
+        return (self.token, self.ck.n_phases, rl.backend, rl.mode,
+                rl.grid.astuple(), rl.block.astuple(), rl.n_warps,
+                self.simd, self.chunk, rl.warp_exec, _mesh_key(self.mesh),
+                self.axis)
+
     def stage_key(self) -> tuple:
         """The staging-cache key *without* the kernel-identity element
         (the dispatcher prepends it).  Same layout as the old
@@ -147,11 +160,7 @@ class LaunchRequest:
         phase count second — with ``donate`` appended: a donating
         executable aliases its input buffers and must never be handed a
         launch that expects copies."""
-        rl = self.rl
-        return (self.token, self.ck.n_phases, rl.backend, rl.mode,
-                rl.grid.astuple(), rl.block.astuple(), rl.n_warps,
-                self.simd, self.chunk, rl.warp_exec, _mesh_key(self.mesh),
-                self.axis, self.donate)
+        return self.fn_key() + (self.donate,)
 
 
 class LaunchHandle:
@@ -230,7 +239,14 @@ class Stream:
     or the legacy default stream — connects them.  The **default
     stream** has CUDA's legacy-sync semantics: a launch on it is ordered
     after the current tail of *every* stream, and every stream's next
-    launch is ordered after the default stream's tail."""
+    launch is ordered after the default stream's tail.
+
+    While a stream is **capturing** into a :class:`~repro.core.graphs.
+    Graph` (``begin_capture()``/``end_capture()``, CUDA's
+    ``cudaStreamBeginCapture``), launches record graph nodes instead of
+    dispatching, and host-blocking operations (``synchronize``, waiting
+    on eager events) raise :class:`CoxUnsupported` — exactly the set of
+    operations cudaStreamCapture invalidates a capture over."""
 
     _names = itertools.count()
 
@@ -242,6 +258,8 @@ class Stream:
         self.name = name or ("default" if _default
                              else f"stream{next(self._names)}")
         self._wait_deps: List[int] = []   # event edges for the next launch
+        self._capture = None              # Graph while capturing, else None
+        self._capture_deps: List[int] = []   # captured event edges (node idx)
 
     def __repr__(self):
         return f"Stream({self.name!r})"
@@ -267,11 +285,53 @@ class Stream:
         launch — the handle only defers the *wait*, never the work.
         Enqueue order is always a legal linearization (an event edge
         requires its ``record`` to precede the ``wait``), so eager
-        dispatch can never violate a dependency."""
+        dispatch can never violate a dependency.
+
+        While capturing, the request is recorded as a graph node instead
+        of dispatching, and the returned handle's ``.outputs`` /
+        ``.arrays()`` hand back :class:`~repro.core.types.GraphRef`
+        placeholders for chaining captured launches."""
         req = kern.make_request(grid=grid, block=block, args=args, **knobs)
+        if self._capture is not None:
+            return self._capture.add_request(req, stream=self)
         handle = self._disp.enqueue(req, self)
         self._disp.flush()
         return handle
+
+    # ---------------- stream capture (CUDA graphs) ----------------
+
+    def begin_capture(self, graph=None):
+        """Start capturing this stream's schedule into ``graph`` (a new
+        :class:`~repro.core.graphs.Graph` when ``None``) — CUDA
+        ``cudaStreamBeginCapture``.  Returns the graph."""
+        from . import graphs as _graphs      # late: graphs imports streams
+        if self._capture is not None:
+            raise CoxUnsupported(
+                f"{self!r} is already capturing into "
+                f"{self._capture!r} — end_capture() first")
+        g = graph if graph is not None else _graphs.Graph()
+        g._attach_stream(self)
+        self._capture = g
+        self._capture_deps = []
+        self._disp._capturing.add(self)
+        return g
+
+    def end_capture(self):
+        """End capture and return the captured graph (CUDA
+        ``cudaStreamEndCapture``)."""
+        if self._capture is None:
+            raise CoxUnsupported(
+                f"{self!r}.end_capture() without begin_capture()")
+        g = self._capture
+        g._detach_stream(self)
+        self._capture = None
+        self._capture_deps = []
+        self._disp._capturing.discard(self)
+        return g
+
+    @property
+    def capturing(self) -> bool:
+        return self._capture is not None
 
     def wait_event(self, event: "Event") -> None:
         """All *subsequent* launches on this stream wait for ``event``
@@ -288,11 +348,23 @@ class Stream:
     def synchronize(self) -> None:
         """Block the host until every launch enqueued on this stream has
         completed.  Idempotent — synchronizing an already-idle stream is
-        a no-op."""
+        a no-op.  Illegal during capture (a capture records a schedule,
+        it runs nothing — there is nothing to wait for, and CUDA
+        invalidates the capture)."""
+        if self._capture is not None:
+            raise CoxUnsupported(
+                f"{self!r}.synchronize() during stream capture — a "
+                f"capture records the schedule without running it; "
+                f"end_capture() first (cudaStreamSynchronize in a "
+                f"capture invalidates it)")
         self._disp.sync_stream(self)
 
     def _consume_wait_deps(self) -> List[int]:
         deps, self._wait_deps = self._wait_deps, []
+        return deps
+
+    def _consume_capture_deps(self) -> List[int]:
+        deps, self._capture_deps = self._capture_deps, []
         return deps
 
 
@@ -313,10 +385,22 @@ class Event:
         self._disp: Optional[Dispatcher] = None
         self._recorded = False
         self._t_done: Optional[float] = None
+        self._graph = None                 # capture graph, when recorded there
+        self._gnode = None                 # captured tail node (None: idle)
 
     def record(self, stream: Optional[Stream] = None) -> "Event":
         stream = stream if stream is not None else get_dispatcher().default
         self._disp = stream.dispatcher
+        if stream._capture is not None:
+            # capture-recorded: the event marks the stream's captured
+            # tail node — a schedule edge, not a completion point
+            self._graph = stream._capture
+            self._gnode = stream._capture._tail_node(stream)
+            self._req = None
+            self._recorded = True
+            self._t_done = None
+            return self
+        self._graph = self._gnode = None
         self._req = self._disp.tail_request(stream)   # None: empty stream
         self._recorded = True
         # recording on an idle stream completes immediately (CUDA: an
@@ -325,12 +409,43 @@ class Event:
         return self
 
     def wait(self, stream: Stream) -> None:
-        if not self._recorded or self._req is None:
+        if not self._recorded:
             return                       # CUDA: wait-before-record is a no-op
+        if self._graph is not None:      # capture-recorded event
+            if stream._capture is None:
+                raise CoxUnsupported(
+                    f"eager stream {stream.name!r} cannot wait on an "
+                    f"event recorded during capture — the captured "
+                    f"schedule has not run; wait inside the same "
+                    f"capture or replay the graph first")
+            if stream._capture is not self._graph:
+                raise CoxUnsupported(
+                    f"stream {stream.name!r} is capturing into a "
+                    f"different graph than the one this event was "
+                    f"recorded in — cross-graph event edges are not "
+                    f"capturable")
+            if self._gnode is not None:
+                stream._capture_deps.append(self._gnode.idx)
+            return
+        if stream._capture is not None:
+            raise CoxUnsupported(
+                f"capturing stream {stream.name!r} cannot wait on an "
+                f"event recorded outside its capture — CUDA invalidates "
+                f"the capture; record the event inside the capture")
+        if self._req is None:
+            return
         stream._wait_deps.append(self._req.seq)
 
     def query(self) -> bool:
-        """True when the recorded work has completed (never blocks)."""
+        """True when the recorded work has completed (never blocks).
+        Illegal for a capture-recorded event — captured work never runs
+        until replay, so completion is not a meaningful question."""
+        if self._graph is not None:
+            raise CoxUnsupported(
+                "Event.query() on an event recorded during stream "
+                "capture — the captured schedule runs only at "
+                "graph.replay(); a capture event is a schedule edge, "
+                "not a completion point")
         if not self._recorded:
             return True
         if self._req is None:
@@ -342,6 +457,11 @@ class Event:
     def synchronize(self) -> "Event":
         """Block until the recorded work completed; idempotent.  The
         first call stamps the event's completion time."""
+        if self._graph is not None:
+            raise CoxUnsupported(
+                "Event.synchronize() on an event recorded during stream "
+                "capture — the captured schedule runs only at "
+                "graph.replay()")
         if not self._recorded:
             raise CoxUnsupported("Event.synchronize() before record()")
         if self._req is not None:
@@ -379,7 +499,8 @@ class Dispatcher:
     so every stream — and the synchronous ``KernelFn.launch`` path —
     shares one staging per distinct launch shape."""
 
-    def __init__(self, stage_cache_size: int = STAGE_CACHE_SIZE):
+    def __init__(self, stage_cache_size: int = STAGE_CACHE_SIZE,
+                 dispatch_log_max: int = DISPATCH_LOG_MAX):
         # _lock guards the queues/caches and is only ever held briefly;
         # _dispatch_lock serializes whole flush drains so concurrent
         # flushes cannot interleave dispatch out of dependency order,
@@ -389,6 +510,7 @@ class Dispatcher:
         self._dispatch_lock = threading.Lock()
         self._stage_cache_size = stage_cache_size
         self._staged: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._staged_fns: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._pending: "OrderedDict[int, LaunchRequest]" = OrderedDict()
         self._inflight: Dict[int, LaunchRequest] = {}
         # stream -> weakref to its tail request.  Both sides are weak on
@@ -400,9 +522,14 @@ class Dispatcher:
         self._tails: "weakref.WeakKeyDictionary[Stream, Any]" = \
             weakref.WeakKeyDictionary()
         self._seq = itertools.count()
-        self.dispatch_log: List[int] = []   # seq order of dispatches
+        # bounded structurally: maxlen evicts the oldest entries, so a
+        # long-lived serving loop cannot grow per-launch host state
+        self.dispatch_log: Deque[int] = deque(maxlen=dispatch_log_max)
         self.stage_hits = 0
         self.stage_misses = 0
+        self.stage_fn_hits = 0
+        self.stage_fn_misses = 0
+        self._capturing: "weakref.WeakSet[Stream]" = weakref.WeakSet()
         self.default = Stream(dispatcher=self, _default=True)
 
     # ---------------- enqueue ----------------
@@ -411,6 +538,15 @@ class Dispatcher:
         """Assign the request its place in the launch order: program
         order on its stream, pending event edges, and the default
         stream's legacy-sync edges."""
+        if req.globals_:
+            for name, val in req.globals_.items():
+                if isinstance(val, GraphRef):
+                    raise CoxUnsupported(
+                        f"kernel '{req.ck.kernel.name}': argument "
+                        f"'{name}' is a capture placeholder ({val!r}) "
+                        f"that escaped its graph — captured outputs "
+                        f"only exist inside the capture; replay the "
+                        f"graph and use its real outputs instead")
         with self._lock:
             req.seq = next(self._seq)
             req.stream = stream
@@ -448,7 +584,12 @@ class Dispatcher:
         """Resolve the request to a staged ``(plan, exe)``, shared
         across streams.  ``id(ck)`` is safe in the key because the
         cached plan holds a strong reference to the same ck — the id
-        cannot be recycled while the entry lives."""
+        cannot be recycled while the entry lives.
+
+        The executable is the jit wrap of the raw launcher from
+        :meth:`stage_fn`, so eager staging and graph staging share one
+        trace recipe per launch shape — a graph capturing a kernel the
+        streams already launched re-traces nothing, and vice versa."""
         key = (id(req.ck),) + req.stage_key()
         with self._lock:
             hit = self._staged.get(key)
@@ -456,9 +597,54 @@ class Dispatcher:
                 self._staged.move_to_end(key)
                 self.stage_hits += 1
                 return hit
-        staged = _runtime.build_resolved(
+        plan, fn = self.stage_fn(req)
+        staged = (plan, jax.jit(fn, donate_argnums=(0,) if req.donate
+                                else ()))
+        with self._lock:
+            self.stage_misses += 1
+            self._staged[key] = staged
+            while len(self._staged) > self._stage_cache_size:
+                self._staged.popitem(last=False)
+        return staged
+
+    def stage_fn(self, req: LaunchRequest):
+        """Resolve the request to its *raw* (un-jitted) launcher,
+        ``(plan, fn)`` — the form the graph tracer inlines.  Cached
+        separately from :meth:`stage` (an fn is a trace recipe, an exe
+        is a compiled program) but shared across every graph that
+        captures the same launch shape, so two graphs over the same
+        kernel trace it once."""
+        key = (id(req.ck),) + req.fn_key()
+        with self._lock:
+            hit = self._staged_fns.get(key)
+            if hit is not None:
+                self._staged_fns.move_to_end(key)
+                self.stage_fn_hits += 1
+                return hit
+        staged = _runtime.build_traceable(
             req.ck, req.rl, simd=req.simd, mesh=req.mesh, axis=req.axis,
-            chunk=req.chunk, donate=req.donate)
+            chunk=req.chunk)
+        with self._lock:
+            self.stage_fn_misses += 1
+            self._staged_fns[key] = staged
+            while len(self._staged_fns) > self._stage_cache_size:
+                self._staged_fns.popitem(last=False)
+        return staged
+
+    def stage_graph(self, key: tuple, builder):
+        """Stage a captured graph's fused executable in the shared LRU.
+        ``key`` starts with the literal ``"graph"`` tag (so
+        :meth:`cache_view`'s kernel-id filter never surfaces graph
+        entries) followed by the captured DAG's per-node stage keys —
+        two structurally identical captures hit the same executable.
+        ``builder()`` runs without the queue lock (it traces)."""
+        with self._lock:
+            hit = self._staged.get(key)
+            if hit is not None:
+                self._staged.move_to_end(key)
+                self.stage_hits += 1
+                return hit
+        staged = builder()
         with self._lock:
             self.stage_misses += 1
             self._staged[key] = staged
@@ -514,9 +700,7 @@ class Dispatcher:
         req.scalars = None
         with self._lock:
             self._inflight[req.seq] = req
-            self.dispatch_log.append(req.seq)
-            if len(self.dispatch_log) > 2 * DISPATCH_LOG_MAX:
-                del self.dispatch_log[:-DISPATCH_LOG_MAX]
+            self.dispatch_log.append(req.seq)   # deque: maxlen-bounded
 
     def flush(self) -> None:
         """Dispatch every pending request in topological order.  The
@@ -582,7 +766,19 @@ class Dispatcher:
     def sync_stream(self, stream: Optional[Stream]) -> None:
         """Block until every launch enqueued on ``stream`` completed
         (``None``: on any stream).  The first deferred launch error of
-        the synced set is raised, CUDA's sticky-async-error analogue."""
+        the synced set is raised, CUDA's sticky-async-error analogue.
+        Illegal while any stream of this dispatcher is capturing —
+        CUDA invalidates an active capture on a device-wide sync."""
+        if stream is not None and stream._capture is not None:
+            raise CoxUnsupported(
+                f"cannot synchronize {stream!r} during stream capture — "
+                f"end_capture() first")
+        if stream is None and self._capturing:
+            names = sorted(s.name for s in self._capturing)
+            raise CoxUnsupported(
+                f"device-wide synchronize while stream(s) {names} are "
+                f"capturing — a capture records the schedule without "
+                f"running it; end_capture() first")
         self.flush()
         errs = []
         for r in self._take_inflight(stream):

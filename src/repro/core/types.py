@@ -193,6 +193,31 @@ class BarrierLevel(enum.Enum):
         return self.rank >= other.rank
 
 
+class GraphRef:
+    """Symbolic handle to a captured launch's output — the currency of
+    stream capture (``repro.core.graphs``).
+
+    While a stream is capturing, launch handles hand back ``GraphRef``
+    placeholders instead of arrays; passing one as an argument to a
+    later captured launch records a *data edge* in the captured DAG
+    (the graph tracer threads the producer's output straight into the
+    consumer, eliding the intermediate buffer).  A ``GraphRef`` never
+    holds data: consuming it outside its capture raises
+    :class:`CoxUnsupported` at enqueue."""
+
+    __slots__ = ("node", "name", "shape", "dtype")
+
+    def __init__(self, node, name: str, shape: tuple, dtype: DType):
+        self.node = node          # owning GraphNode (repro.core.graphs)
+        self.name = name          # output (global param) name
+        self.shape = shape        # shape the consumer observes
+        self.dtype = dtype
+
+    def __repr__(self):
+        return (f"GraphRef({self.node!r}.{self.name}, "
+                f"shape={self.shape}, {self.dtype.value})")
+
+
 @dataclasses.dataclass(frozen=True)
 class ArraySpec:
     """A kernel parameter backed by global memory."""

@@ -42,6 +42,95 @@ def _token_hist(c, hist: cox.Array(cox.i32), toks: cox.Array(cox.i32),
         c.atomic_add(hist, toks[i] % nbins, 1)
 
 
+# the per-token pipeline kernels (--graph captures this 3-launch DAG
+# once and replays it per decode step): masked histogram accumulate →
+# running total → per-bin stats over the settled counts
+@cox.kernel
+def _tok_hist_add(c, hist: cox.Array(cox.i32), toks: cox.Array(cox.i32),
+                  n: cox.i32, nbins: cox.i32):
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    if i < n:
+        if toks[i] >= 0:                  # -1 marks an idle decode slot
+            c.atomic_add(hist, toks[i] % nbins, 1)
+
+
+@cox.kernel
+def _tok_hist_total(c, tot: cox.Array(cox.i32), hist: cox.Array(cox.i32),
+                    nbins: cox.i32):
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    if i < nbins:
+        c.atomic_add(tot, 0, hist[i])
+
+
+@cox.kernel
+def _tok_hist_stats(c, sq: cox.Array(cox.i32), hist: cox.Array(cox.i32),
+                    tot: cox.Array(cox.i32), nbins: cox.i32):
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    if i < nbins:
+        sq[i] = hist[i] * hist[i] + tot[0]
+
+
+class TokenPipeline:
+    """Per-decode-step token statistics as a 3-kernel DAG on one cox
+    stream: histogram-accumulate (carried across steps) → total →
+    per-bin stats.  ``graph=True`` captures the DAG once and replays it
+    per step — one staged-executable call per token instead of three
+    binds/launches — with the step's tokens and the carried histogram
+    rebound each replay; ``graph=False`` issues the three launches
+    eagerly.  Both modes are bitwise-identical by the graph-replay
+    equivalence contract."""
+
+    def __init__(self, batch: int, nbins: int = 64, *, graph: bool = False):
+        self.batch = batch
+        self.nbins = nbins
+        self.use_graph = graph
+        self.stream = cox.Stream(name="tok-pipeline")
+        self.hist = np.zeros(nbins, np.int32)
+        self.last: Dict[str, np.ndarray] = {}
+        self._graph: Optional[cox.Graph] = None
+        self.steps = 0
+
+    def _launch_dag(self, toks: np.ndarray):
+        """Issue the 3-kernel DAG on the stream (capturing or eager)."""
+        block = 64
+        s, nb = self.stream, self.nbins
+        h0 = s.launch(_tok_hist_add, grid=-(-self.batch // block),
+                      block=block,
+                      args=(self.hist, toks, self.batch, nb))
+        h1 = s.launch(_tok_hist_total, grid=-(-nb // block), block=block,
+                      args=(np.zeros(1, np.int32), h0.outputs["hist"], nb))
+        h2 = s.launch(_tok_hist_stats, grid=-(-nb // block), block=block,
+                      args=(np.zeros(nb, np.int32), h1.outputs["hist"],
+                            h1.outputs["tot"], nb))
+        return h2
+
+    def step(self, tokens: np.ndarray, active: np.ndarray) -> None:
+        """Fold one decode step's emitted tokens (idle slots masked to
+        -1) into the running statistics."""
+        toks = np.where(active, tokens, -1).astype(np.int32)
+        self.steps += 1
+        if self.use_graph:
+            if self._graph is None:       # capture once, replay per token
+                self._graph = cox.Graph(name="tok-pipeline")
+                with self._graph.capture(self.stream):
+                    self._launch_dag(toks)
+                res = self._graph.replay()
+            else:
+                res = self._graph.replay(toks=toks, hist=self.hist)
+            self.hist = res["hist"]       # carried via node 2's pass-through
+            self.last = {"tot": res["tot"], "sq": res["sq"]}
+            return
+        h2 = self._launch_dag(toks)
+        out = h2.arrays()                 # async: futures, no host block
+        self.hist = out["hist"]
+        self.last = {"tot": out["tot"], "sq": out["sq"]}
+
+    def collect(self) -> Dict[str, np.ndarray]:
+        """Materialize the final statistics (one sync)."""
+        return {"hist": np.asarray(self.hist),
+                **{k: np.asarray(v) for k, v in self.last.items()}}
+
+
 class RequestKernelPool:
     """Per-request kernel postprocessing on per-slot cox streams.
 
@@ -87,6 +176,8 @@ class BatchedServer:
         self.params = jax.device_put(params, self.bundle["param_sh"])
         self.batch = batch
         self.ctx = ctx
+        # one batched-prefill executable per prompt length (shapes differ)
+        self._prefill_cache: Dict[int, Any] = {}
         self.reset()
 
     def reset(self):
@@ -100,15 +191,47 @@ class BatchedServer:
         self.active = np.zeros((self.batch,), bool)
         self.outputs: List[List[int]] = [[] for _ in range(self.batch)]
 
+    def _build_prefill(self, T: int):
+        """One jitted program for a whole T-token prompt: ``lax.scan``
+        of the raw (un-jitted) serve step over the token matrix, cache
+        donated across the scan.  Replaces T host round-trips (one
+        jitted dispatch per prompt token) with a single call; the math
+        is identical to stepping token-by-token."""
+        raw = self.bundle["raw_step"]
+
+        def prefill(params, cache, tok_mat, pos0, mask):
+            def body(carry, toks):
+                cache, pos = carry
+                _, cache = raw(params, cache, toks, pos)
+                return (cache, pos + mask), None
+
+            (cache, pos), _ = jax.lax.scan(body, (cache, pos0), tok_mat)
+            return cache, pos
+
+        return jax.jit(prefill, donate_argnums=(1,))
+
     def prefill_prompt(self, slot: int, prompt: List[int]):
-        """Feed a prompt token-by-token through the decode path (simple
-        prefill; a chunked prefill kernel is the production option)."""
+        """Feed a prompt through the decode path in ONE step per slot: a
+        single scanned+jitted call consumes the whole prompt (same
+        per-token math as the decode loop, batched on device)."""
         self.pos[slot] = 0
         self.outputs[slot] = []
         self.active[slot] = True
-        for t in prompt:
-            self.tokens[slot] = t
-            self._step_all()
+        T = len(prompt)
+        if T == 0:
+            return self
+        fn = self._prefill_cache.get(T)
+        if fn is None:
+            fn = self._prefill_cache[T] = self._build_prefill(T)
+        # other slots keep stepping with their current (stale) token,
+        # exactly as the old token-by-token loop did
+        tok_mat = np.tile(self.tokens.astype(np.int32), (T, 1))
+        tok_mat[:, slot] = np.asarray(prompt, np.int32)
+        mask = self.active.astype(np.int32)
+        self.cache, pos = fn(self.params, self.cache, jnp.asarray(tok_mat),
+                             jnp.asarray(self.pos), jnp.asarray(mask))
+        self.pos = np.array(pos)        # writable host copy
+        self.tokens[slot] = prompt[-1]
         return self
 
     def _step_all(self):
@@ -121,9 +244,11 @@ class BatchedServer:
                 self.pos[i] += 1
         return nxt
 
-    def decode(self, max_tokens: int, eos: Optional[int] = None):
+    def decode(self, max_tokens: int, eos: Optional[int] = None,
+               pipelines: Optional[List["TokenPipeline"]] = None):
         for _ in range(max_tokens):
             nxt = self._step_all()
+            was_active = self.active.copy()
             for i in range(self.batch):
                 if not self.active[i]:
                     continue
@@ -134,23 +259,36 @@ class BatchedServer:
                     self.active[i] = False
                 if self.pos[i] >= self.ctx - 1:
                     self.active[i] = False
+            for p in pipelines or ():
+                p.step(nxt, was_active)
             if not self.active.any():
                 break
         return self.outputs
 
 
 def serve_requests(arch: str, *, batch: int, ctx: int, n_requests: int,
-                   max_tokens: int, seed: int = 0,
-                   postproc: bool = False) -> Dict[str, Any]:
+                   max_tokens: int, seed: int = 0, postproc: bool = False,
+                   graph: bool = False) -> Dict[str, Any]:
     """Continuous batching over a queue of synthetic prompt requests.
 
     With ``postproc=True`` every finished request's token histogram is
     issued on that slot's cox stream and left in flight — per-request
     kernel work overlaps across requests and with subsequent decode
-    steps; one synchronize at the end collects everything."""
+    steps; one synchronize at the end collects everything.
+
+    With ``graph=True`` the per-token stats pipeline (3 dependent
+    kernels per decode step) is stream-captured once into a
+    ``cox.Graph`` and *replayed* every token — one fused XLA call
+    instead of three launches' worth of host-side dispatch.  A shadow
+    eager pipeline runs the same steps and the final statistics are
+    asserted bitwise-equal."""
     rng = np.random.default_rng(seed)
     server = BatchedServer(arch, batch=batch, ctx=ctx, seed=seed)
     pool = RequestKernelPool(batch) if postproc else None
+    pipelines: List[TokenPipeline] = []
+    if graph:
+        pipelines = [TokenPipeline(batch, graph=True),
+                     TokenPipeline(batch, graph=False)]
     queue = [list(rng.integers(1, server.cfg.vocab, size=8))
              for _ in range(n_requests)]
     done: List[List[int]] = []
@@ -159,7 +297,7 @@ def serve_requests(arch: str, *, batch: int, ctx: int, n_requests: int,
         for slot in range(batch):
             if not server.active[slot] and queue:
                 server.prefill_prompt(slot, queue.pop(0))
-        server.decode(max_tokens)
+        server.decode(max_tokens, pipelines=pipelines)
         for slot in range(batch):
             if not server.active[slot] and server.outputs[slot]:
                 done.append(server.outputs[slot])
@@ -180,6 +318,14 @@ def serve_requests(arch: str, *, batch: int, ctx: int, n_requests: int,
     if pool is not None:
         # the histograms were binned from exactly the emitted tokens
         assert out["postproc"]["hist_tokens"] == total_tokens
+    if graph:
+        g_stats, e_stats = (p.collect() for p in pipelines)
+        for k in g_stats:               # replay ≡ eager, bitwise
+            assert np.array_equal(g_stats[k], e_stats[k]), k
+        assert int(g_stats["hist"].sum()) == total_tokens
+        out["graph"] = {"steps": pipelines[0].steps,
+                        "hist_tokens": int(g_stats["hist"].sum()),
+                        "replayed": pipelines[0]._graph is not None}
     return out
 
 
@@ -193,15 +339,23 @@ def main():
     ap.add_argument("--postproc", action="store_true",
                     help="per-request postprocess kernels on per-slot "
                          "cox streams (overlapped, one final sync)")
+    ap.add_argument("--graph", action="store_true",
+                    help="capture the per-token stats pipeline once as a "
+                         "cox.Graph and replay it every decode step "
+                         "(verified bitwise against eager launches)")
     args = ap.parse_args()
     out = serve_requests(args.arch, batch=args.batch, ctx=args.ctx,
                          n_requests=args.requests, max_tokens=args.tokens,
-                         postproc=args.postproc)
+                         postproc=args.postproc, graph=args.graph)
     msg = (f"served {out['completed']} requests, {out['tokens']} tokens, "
            f"{out['tok_per_s']:.1f} tok/s")
     if args.postproc:
         msg += (f" (+{out['postproc']['requests']} postproc kernels, "
                 f"{out['postproc']['hist_tokens']} tokens binned)")
+    if args.graph:
+        msg += (f" (graph replay: {out['graph']['steps']} steps, "
+                f"{out['graph']['hist_tokens']} tokens binned, "
+                f"bitwise == eager)")
     print(msg)
 
 

@@ -153,7 +153,10 @@ def make_serve_step(cfg: ModelConfig, mesh: Mesh,
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, new_cache
 
-    return step, {"rules": rules, "specs": spec_tree,
+    # raw_step: the un-jitted body, re-traceable inside larger programs
+    # (the serving driver scans it over a whole prompt for one-call
+    # batched prefill instead of one jitted dispatch per token)
+    return step, {"rules": rules, "specs": spec_tree, "raw_step": step,
                   "param_sh": param_shardings(rules, spec_tree)}
 
 

@@ -90,8 +90,8 @@ def test_in_order_within_stream():
     assert h1.request.seq in h2.request.deps
     assert h2.request.seq in h3.request.deps
     d.flush()
-    assert d.dispatch_log == [h1.request.seq, h2.request.seq,
-                              h3.request.seq]
+    assert list(d.dispatch_log) == [h1.request.seq, h2.request.seq,
+                                    h3.request.seq]
 
 
 def test_event_edge_orders_across_streams():
@@ -414,3 +414,29 @@ def test_donate_rejected_on_sharded():
     with pytest.raises(CoxUnsupported):
         _saxpy.launch(grid=2, block=128, args=(o, x, y, n),
                       donate=True, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# dispatch_log retention: bounded structurally, not by ad-hoc trims
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_log_is_bounded_deque():
+    """A long launch loop must keep host bookkeeping flat: the log is a
+    ``deque(maxlen=...)``, so it can never exceed its bound no matter
+    how many launches a long-lived serving process issues — and it
+    retains exactly the most recent dispatches, in order."""
+    from collections import deque
+
+    d = Dispatcher(dispatch_log_max=16)
+    s = Stream("loop", d)
+    assert isinstance(d.dispatch_log, deque)
+    assert d.dispatch_log.maxlen == 16
+    o, x, y, n = _args(256)
+    handles = [s.launch(_saxpy, grid=1, block=64, args=(o, x, y, n))
+               for _ in range(40)]
+    s.synchronize()
+    assert len(d.dispatch_log) == 16       # never grows past maxlen
+    assert list(d.dispatch_log) == [h.request.seq for h in handles[-16:]]
+    # the in-flight table drained too — no per-launch state survives
+    assert not d._inflight and not d._pending
