@@ -22,7 +22,10 @@ by diffing the smoke output against the committed baseline
   every chain depth (replay-vs-eager bitwise equality asserted
   in-process) in both smoke and baseline, and the committed baseline's
   deepest chain shows replay actually beating per-launch dispatch
-  (``speedup_x >= 1.5`` at depth 16) — the tentpole perf claim.
+  (``speedup_x >= 1.5`` at depth 16) — the tentpole perf claim;
+* the smoke run's recorded ``dispatch_health`` is clean: zero
+  degradations/retries/timeouts/failures and no sticky error — timed
+  cells must be the *resolved* configuration, never a fallback rung.
 
 Usage: ``python benchmarks/check_smoke.py BENCH_SMOKE.json BENCH_PR6.json``
 """
@@ -102,6 +105,7 @@ def main(argv: list[str]) -> None:
 
     check_streams(smoke, baseline, row_names)
     check_graph(smoke, baseline, row_names)
+    check_health(smoke)
 
     print(
         f"check_smoke: OK — {len(SWEEP_SMOKE_PICKS)} kernels × "
@@ -171,6 +175,30 @@ def check_graph(smoke: dict, baseline: dict, row_names: set) -> None:
     for depth in GRAPH_DEPTHS:
         if f"graph_replay.chain_depth{depth}" not in row_names:
             fail(f"graph_replay.chain_depth{depth}: CSV row missing from smoke")
+
+
+def check_health(smoke: dict) -> None:
+    """A clean bench run must never have leaned on the fault-tolerance
+    machinery: a degradation-ladder rung (or a retry/timeout) means the
+    timed cell was not the resolved configuration, so the numbers lie.
+    Tolerates a baseline written before dispatch_health existed — only
+    the fresh smoke run is gated."""
+    health = smoke.get("dispatch_health")
+    if health is None:
+        fail(
+            "smoke run carries no dispatch_health (benchmarks/run.py "
+            "should record cox.get_dispatcher().health())"
+        )
+    for key in ("degradations", "retries", "timeouts", "failures"):
+        n = health.get(key)
+        if n != 0:
+            fail(
+                f"smoke run is not clean: dispatch_health[{key!r}] == {n!r} "
+                f"(expected 0) — the degradation ladder or retry path "
+                f"fired during a benchmark"
+            )
+    if health.get("sticky") is not None:
+        fail(f"smoke run ended with a sticky device error: {health['sticky']}")
 
 
 if __name__ == "__main__":

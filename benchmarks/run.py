@@ -576,6 +576,10 @@ def main(argv=None) -> None:
             "backend_sweep": SWEEP_RESULTS,
             "streams": STREAM_RESULTS,
             "graph_replay": GRAPH_RESULTS,
+            # fault-tolerance counters for the whole run: a clean bench
+            # must never have taken a degradation-ladder rung (a rung
+            # means the timed configuration is not the resolved one)
+            "dispatch_health": cox.get_dispatcher().health(),
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -16,17 +16,24 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, Optional, Sequence
 
+from . import errors  # noqa: F401  (cox.errors — typed error hierarchy)
+from . import faults  # noqa: F401  (cox.faults — fault injection)
 from . import flat as _flat
 from . import kernel_ir as K
 from . import runtime as _runtime
 from . import streams as _streams
 from .backends.plan import bind_kernel_args, check_donate_supported
+from .errors import (CoxCompileError, CoxDependencyError,  # noqa: F401
+                     CoxDeviceError, CoxError, CoxLaunchError,
+                     CoxTimeoutError)
 from .execute import CompiledKernel, compile_kernel
 from .frontend import Array, parse_kernel  # noqa: F401  (cox.Array re-export)
 from .graphs import (Graph, GraphExec,  # noqa: F401  (cox.Graph capture API)
                      GraphNodeHandle)
 from .streams import (Event, default_stream, synchronize,  # noqa: F401
                       LaunchHandle, Stream, get_dispatcher)
+from .streams import (device_reset, get_last_error,  # noqa: F401
+                      peek_at_last_error)  # cudaGetLastError analogues
 from .streams import _mesh_key  # noqa: F401  (compat re-export for tests)
 from .types import (CoxUnsupported, DType, Dim3, WARP_SIZE,  # noqa: F401
                     GraphRef, as_dim3)  # Dim3 re-exported: launch geometry
@@ -120,7 +127,10 @@ class KernelFn:
         return _streams.LaunchRequest(
             ck=ck, token=token, rl=rl, simd=simd, chunk=chunk, mesh=mesh,
             axis=axis, donate=donate, globals_=globals_, shapes=shapes,
-            scalars=scalars)
+            scalars=scalars,
+            # pre-resolution knobs: the degradation ladder may only fall
+            # back along rungs the caller left on 'auto'
+            req_backend=backend, req_warp_exec=warp_exec)
 
     def launch(self, *, grid, block, args: Sequence[Any],
                collapse: str = "hybrid", mode: str = "auto",

@@ -49,7 +49,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .types import ArraySpec, CoxUnsupported, GraphRef
+from . import errors as _errors
+from . import faults as _faults
+from .types import ArraySpec, CoxTypeError, CoxUnsupported, GraphRef
 
 _names = itertools.count()
 
@@ -261,9 +263,9 @@ class Graph:
         def builder():
             return _trace_graph(disp, nodes, spec)
 
-        exe = disp.stage_graph(key, builder)
+        exe, raw_fn = disp.stage_graph(key, builder)
         self._frozen = True                # the DAG is baked in; no edits
-        return GraphExec(self, disp, exe, spec)
+        return GraphExec(self, disp, exe, raw_fn, spec)
 
     def replay(self, **bindings) -> Dict[str, Any]:
         """Instantiate lazily (once), then replay — the one-call CUDA
@@ -361,8 +363,24 @@ def _trace_graph(disp, nodes: List[GraphNode], spec: Dict[str, Any]):
     *inside* the trace (a no-op for the captured defaults, the
     conversion point for rebound values).  Returns only terminal
     outputs — consumed intermediates exist solely as values inside the
-    trace, free for XLA to fuse away."""
-    staged = [disp.stage_fn(n.req) for n in nodes]   # [(plan, fn)] raw
+    trace, free for XLA to fuse away.  Returns ``(jitted, raw)`` — the
+    fused executable plus the un-jitted trace function, the replay →
+    eager fallback rung of the degradation ladder.
+
+    A node that fails to stage fails the whole instantiation with *its
+    own* typed error (:func:`~repro.core.errors.classify`, naming the
+    node) — there is no partial graph."""
+    staged = []                                      # [(plan, fn)] raw
+    for n in nodes:
+        fault = _faults.consume("stage", n.label)
+        if fault is not None:
+            raise fault
+        try:
+            staged.append(disp.stage_fn(n.req))
+        except Exception as e:
+            raise _errors.classify(
+                e, site="stage",
+                what=f"graph node {n.idx} (kernel '{n.label}')")
     node_bindings = spec["node_bindings"]
     outputs = spec["outputs"]
     dtypes = spec["dtypes"]
@@ -384,7 +402,7 @@ def _trace_graph(disp, nodes: List[GraphNode], spec: Dict[str, Any]):
                 vals[(n.idx, k)] = v
         return {c: vals[t] for c, t in outputs.items()}
 
-    return jax.jit(graph_fn)
+    return jax.jit(graph_fn), graph_fn
 
 
 class GraphExec:
@@ -399,10 +417,12 @@ class GraphExec:
     rebindings persist across replays
     (``cudaGraphExecKernelNodeSetParams`` semantics)."""
 
-    def __init__(self, graph: Graph, disp, exe, spec: Dict[str, Any]):
+    def __init__(self, graph: Graph, disp, exe, raw_fn,
+                 spec: Dict[str, Any]):
         self._graph = graph
         self._disp = disp
         self._exe = exe
+        self._raw_fn = raw_fn        # un-jitted fallback (eager rung)
         self._aliases = spec["aliases"]
         self._outputs = spec["outputs"]
         self._vals = {}
@@ -437,7 +457,29 @@ class GraphExec:
                 raise KeyError(
                     f"graph {self._graph.name!r} has no input {name!r}; "
                     f"inputs: {sorted(self._vals)}")
-        flat = self._exe(self._vals)
+        gname = self._graph.name
+        fault = _faults.consume("dispatch", gname)
+        try:
+            if fault is not None:
+                raise fault
+            flat = self._exe(self._vals)
+        except Exception as e:
+            err = _errors.classify(e, site="dispatch",
+                                   what=f"graph '{gname}'")
+            if (_errors.is_sticky(err)
+                    or isinstance(err, (CoxUnsupported, CoxTypeError))):
+                raise err            # user/device errors: no fallback
+            # graph-replay → eager fallback: the last ladder rung — run
+            # the same trace un-jitted (bitwise-identical by
+            # construction), and log the degradation on the dispatcher
+            disp = self._disp
+            event = {"kernel": gname, "seq": -1,
+                     "from": "graph-replay", "to": "eager",
+                     "error": repr(err)}
+            with disp._lock:
+                disp.degradations += 1
+                disp.degradation_log.append(event)
+            flat = self._raw_fn(dict(self._vals))
         return {c: v.reshape(self._out_shapes[c]) for c, v in flat.items()}
 
     __call__ = replay

@@ -38,6 +38,26 @@ with device work — the CUDA H2D/compute-overlap story, not two
 simultaneous device queues.  Buffer donation (``donate=True``) lets an
 in-order stream re-launching over the same globals reuse their buffers
 instead of copying (``jax.jit(..., donate_argnums=...)``).
+
+**Error model** (README "Error model & fault tolerance"): failures are
+typed (``repro.core.errors``) and follow CUDA's contract — a failed
+launch surfaces its error at *its own* sync, its DAG descendants
+(stream program order + event edges + ``handle.outputs`` data edges,
+the same edge set graph capture records) fail fast with
+:class:`~repro.core.errors.CoxDependencyError` instead of dispatching
+on stale inputs, the failing stream is poisoned until the error is
+surfaced (or ``stream.reset()``), sticky errors
+(:class:`~repro.core.errors.CoxDeviceError`) poison every enqueue
+until :func:`device_reset`, and ``get_last_error()`` /
+``peek_at_last_error()`` are the ``cudaGetLastError`` /
+``cudaPeekAtLastError`` analogues.  Transient staging failures get a
+bounded retry-with-backoff; non-transient failures on auto-chosen
+knobs walk a graceful-degradation ladder (batched→serial warp
+execution, vmap→scan backend — each rung re-staged, bitwise-correct by
+the backend-equivalence contract, and logged as a structured
+degradation event).  A per-launch deadline (``launch_deadline_s``,
+enforced through :class:`~repro.ft.watchdog.StepWatchdog`) turns a
+hung launch into :class:`~repro.core.errors.CoxTimeoutError` at sync.
 """
 from __future__ import annotations
 
@@ -52,7 +72,11 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 
+from . import errors as _errors
+from . import faults as _faults
 from . import runtime as _runtime
+from ..ft.watchdog import StepWatchdog
+from .errors import (CoxDependencyError, CoxTimeoutError)
 from .types import CoxUnsupported, GraphRef
 
 # staged-executable LRU bound: far above any real working set (every
@@ -65,6 +89,24 @@ STAGE_CACHE_SIZE = 1024
 # state, so the log is a bounded ``deque(maxlen=...)`` holding only the
 # most recent dispatches (older entries fall off structurally)
 DISPATCH_LOG_MAX = 8192
+
+# errored-request retention: a caller that drops a failed handle without
+# syncing must not leak its request forever — errored entries move to a
+# bounded OrderedDict (newest kept, oldest evicted) surfaced via
+# ``get_last_error()`` / ``Dispatcher.error_log``
+ERROR_LOG_MAX = 256
+
+# structured degradation events (ladder fallbacks) — bounded the same way
+DEGRADATION_LOG_MAX = 1024
+
+# transient-failure retry knobs: attempts beyond the first, and the
+# exponential-backoff base (sleep = base * 2**attempt)
+RETRY_LIMIT = 3
+RETRY_BACKOFF_S = 0.005
+
+# deadline-wait poll period: the watchdog timer marks the deadline; the
+# waiter polls readiness at this granularity (host-side, no device cost)
+DEADLINE_POLL_S = 0.001
 
 
 def _is_deleted(x) -> bool:
@@ -133,13 +175,22 @@ class LaunchRequest:
     globals_: Optional[Dict[str, Any]]   # dropped after dispatch
     shapes: Dict[str, tuple]
     scalars: Optional[Dict[str, Any]]
+    # the *requested* (pre-resolution) knobs — the degradation ladder
+    # only falls back along rungs the user left on 'auto'; explicitly
+    # requested knobs are honored and fail as requested
+    req_backend: str = "auto"
+    req_warp_exec: str = "auto"
     # dispatcher bookkeeping (set at enqueue / dispatch)
     seq: int = -1
     stream: Optional["Stream"] = None
     deps: Tuple[int, ...] = ()
+    data_deps: Tuple[int, ...] = ()            # handle.outputs edges
     outputs: Optional[Dict[str, Any]] = None   # raw flat arrays (futures)
     dispatched: bool = False
     error: Optional[BaseException] = None
+    surfaced: bool = False       # error raised to (or consumed by) the caller
+    injected_hang: bool = False  # timeout-site fault: outputs never ready
+    out_ids: List[int] = dataclasses.field(default_factory=list)
 
     def fn_key(self) -> tuple:
         """Everything that determines the request's *traced program* —
@@ -191,7 +242,7 @@ class LaunchHandle:
         req = self._req
         if req.error is not None:
             return True
-        if not req.dispatched:
+        if not req.dispatched or req.injected_hang:
             return False
         return _outputs_ready(req.outputs)
 
@@ -260,6 +311,11 @@ class Stream:
         self._wait_deps: List[int] = []   # event edges for the next launch
         self._capture = None              # Graph while capturing, else None
         self._capture_deps: List[int] = []   # captured event edges (node idx)
+        # first un-surfaced failure on this stream: while set, subsequent
+        # launches on the stream fail fast with CoxDependencyError (they
+        # are program-order descendants of the failed request).  Cleared
+        # when the error is surfaced to the caller, or by reset().
+        self._error: Optional[BaseException] = None
 
     def __repr__(self):
         return f"Stream({self.name!r})"
@@ -359,6 +415,37 @@ class Stream:
                 f"capture invalidates it)")
         self._disp.sync_stream(self)
 
+    # ---------------- error state (stream poisoning) ----------------
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        """The stream's first un-surfaced failure, or ``None`` when the
+        stream is healthy.  While set, every subsequent launch on this
+        stream fails fast with :class:`~repro.core.errors.
+        CoxDependencyError` — CUDA's stream-poisoning behavior.  The
+        state clears when the error is surfaced (a sync/``result()``/
+        ``outputs`` raises it, or ``get_last_error()`` consumes it) or
+        via :meth:`reset`."""
+        return self._error
+
+    def reset(self) -> "Stream":
+        """Clear the stream's non-sticky error state and pending event
+        edges so new work can be enqueued — the recovery point for a
+        caller that dropped a failed handle without surfacing it.  A
+        sticky device error is *not* cleared (only
+        :func:`device_reset` is the ``cudaDeviceReset`` analogue)."""
+        if self._capture is not None:
+            raise CoxUnsupported(
+                f"{self!r}.reset() during stream capture — "
+                f"end_capture() first")
+        self._error = None
+        self._wait_deps = []
+        # retire this stream's retained failed requests too: the next
+        # launch's program-order tail points at them, and an un-surfaced
+        # failure there would re-poison the fresh start
+        self._disp.release_stream_errors(self)
+        return self
+
     def _consume_wait_deps(self) -> List[int]:
         deps, self._wait_deps = self._wait_deps, []
         return deps
@@ -450,8 +537,10 @@ class Event:
             return True
         if self._req is None:
             return True
-        if not self._req.dispatched:
+        if not self._req.dispatched or self._req.injected_hang:
             return False
+        if self._req.error is not None:
+            return True                  # failed work is "complete"
         return _outputs_ready(self._req.outputs)
 
     def synchronize(self) -> "Event":
@@ -500,7 +589,12 @@ class Dispatcher:
     shares one staging per distinct launch shape."""
 
     def __init__(self, stage_cache_size: int = STAGE_CACHE_SIZE,
-                 dispatch_log_max: int = DISPATCH_LOG_MAX):
+                 dispatch_log_max: int = DISPATCH_LOG_MAX, *,
+                 launch_deadline_s: Optional[float] = None,
+                 max_strikes: int = 8,
+                 error_log_max: int = ERROR_LOG_MAX,
+                 retry_limit: int = RETRY_LIMIT,
+                 retry_backoff_s: float = RETRY_BACKOFF_S):
         # _lock guards the queues/caches and is only ever held briefly;
         # _dispatch_lock serializes whole flush drains so concurrent
         # flushes cannot interleave dispatch out of dependency order,
@@ -530,6 +624,33 @@ class Dispatcher:
         self.stage_fn_hits = 0
         self.stage_fn_misses = 0
         self._capturing: "weakref.WeakSet[Stream]" = weakref.WeakSet()
+        # ---- fault tolerance (README "Error model & fault tolerance") ----
+        # errored requests whose handle was dropped without a sync move
+        # here (bounded, oldest evicted) so a long-lived serving loop
+        # stays bounded under repeated failures; surfaced via
+        # get_last_error() / error_log
+        self.error_log_max = error_log_max
+        self._errored: "OrderedDict[int, LaunchRequest]" = OrderedDict()
+        # id(output array) -> (weakref-or-None, producer seq): the data
+        # edges behind handle.outputs chaining.  An entry lives exactly
+        # as long as its producer sits in _inflight/_errored — the
+        # producer's req.outputs holds the array strongly, so the id
+        # cannot be recycled while the entry exists.
+        self._out_producers: Dict[int, Tuple[Any, int]] = {}
+        self._sticky: Optional[BaseException] = None   # device-poisoning error
+        self._last_error: Optional[BaseException] = None   # cudaGetLastError
+        self.launch_deadline_s = launch_deadline_s
+        self.max_strikes = max_strikes
+        self.retry_limit = retry_limit
+        self.retry_backoff_s = retry_backoff_s
+        self.failures = 0        # requests that ended with an error
+        self.retries = 0         # transient-failure retry attempts
+        self.degradations = 0    # ladder fallbacks taken
+        self.timeouts = 0        # launches killed by the deadline
+        self.degradation_log: Deque[Dict[str, Any]] = \
+            deque(maxlen=DEGRADATION_LOG_MAX)
+        self.watchdog: Optional[StepWatchdog] = None   # lazily armed
+        self._wd_lock = threading.Lock()   # serializes deadline awaits
         self.default = Stream(dispatcher=self, _default=True)
 
     # ---------------- enqueue ----------------
@@ -547,6 +668,10 @@ class Dispatcher:
                         f"that escaped its graph — captured outputs "
                         f"only exist inside the capture; replay the "
                         f"graph and use its real outputs instead")
+        if self._sticky is not None:
+            # CUDA: after a sticky error every launch fails synchronously
+            # with that error until cudaDeviceReset (device_reset here)
+            raise self._sticky
         with self._lock:
             req.seq = next(self._seq)
             req.stream = stream
@@ -569,9 +694,31 @@ class Dispatcher:
                     deps.append(dt.seq)          # ...and every stream after it
             deps.extend(stream._consume_wait_deps())
             req.deps = tuple(sorted(set(deps)))
+            if req.globals_:
+                # handle.outputs data edges: an argument that is a live
+                # launch output makes this request a DAG descendant of
+                # its producer
+                ddeps = {self._producer_seq(v) for v in req.globals_.values()}
+                ddeps.discard(None)
+                req.data_deps = tuple(sorted(ddeps))
             self._pending[req.seq] = req
             self._tails[stream] = weakref.ref(req)
             return LaunchHandle(req, self)
+
+    def _producer_seq(self, val) -> Optional[int]:
+        """The in-flight/errored producer seq of ``val``, if ``val`` is
+        one of its raw output arrays (identity-checked — ``id()`` alone
+        is not trusted across object lifetimes)."""
+        try:
+            entry = self._out_producers.get(id(val))
+        except TypeError:
+            return None
+        if entry is None:
+            return None
+        ref, seq = entry
+        if ref is not None and ref() is not val:
+            return None
+        return seq
 
     def tail_request(self, stream: Stream) -> Optional[LaunchRequest]:
         with self._lock:
@@ -690,17 +837,163 @@ class Dispatcher:
         return out
 
     def _dispatch(self, req: LaunchRequest) -> None:
+        name = req.ck.kernel.name
+        if req.error is not None:         # already failed fast (descendant)
+            self._finish_failed(req)
+            return
+        with self._lock:
+            dep_err = self._first_dep_error(req)
+            sticky = self._sticky
+        if dep_err is not None:
+            # fail fast: never dispatch on a failed upstream's stale
+            # outputs — CUDA's poisoned stream simply never runs these
+            root = _errors.root_of(dep_err)
+            self._fail_request(req, CoxDependencyError(
+                f"kernel '{name}' (seq {req.seq}) not dispatched: "
+                f"upstream failure {type(root).__name__}: {root}",
+                root=root))
+            return
+        if sticky is not None:
+            self._fail_request(req, sticky)
+            return
         try:
-            _, exe = self.stage(req)      # may trace/compile — no _lock
-            req.outputs = exe(req.globals_, req.scalars)   # async dispatch
+            outputs = self._run_attempts(req, name)   # stage + async dispatch
         except Exception as e:            # surfaces at *this* request's sync
-            req.error = e
+            self._fail_request(req, e)
+            return
+        req.outputs = outputs
         req.dispatched = True
         req.globals_ = None               # release (or donated) inputs
         req.scalars = None
         with self._lock:
+            for o in outputs.values():
+                try:
+                    ref = weakref.ref(o)
+                except TypeError:
+                    ref = None
+                self._out_producers[id(o)] = (ref, req.seq)
+                req.out_ids.append(id(o))
             self._inflight[req.seq] = req
             self.dispatch_log.append(req.seq)   # deque: maxlen-bounded
+
+    def _first_dep_error(self, req: LaunchRequest) -> Optional[BaseException]:
+        """The first un-surfaced failure among the request's DAG parents
+        (program order + event edges + data edges) or on its stream.
+        Caller holds ``_lock``."""
+        for d in sorted(set(req.deps) | set(req.data_deps)):
+            r = (self._inflight.get(d) or self._errored.get(d)
+                 or self._pending.get(d))
+            if r is not None and r.error is not None and not r.surfaced:
+                return r.error
+        s = req.stream
+        if s is not None and s._error is not None:
+            return s._error
+        return None
+
+    def _fail_request(self, req: LaunchRequest, err: BaseException) -> None:
+        req.error = err
+        self._finish_failed(req)
+
+    def _finish_failed(self, req: LaunchRequest) -> None:
+        """Bookkeeping for a request that failed at (or before) dispatch:
+        record it, poison its stream, update the error registers."""
+        req.dispatched = True
+        req.globals_ = None
+        req.scalars = None
+        with self._lock:
+            self._inflight[req.seq] = req
+            self.dispatch_log.append(req.seq)
+            self._last_error = req.error
+            self.failures += 1
+            if _errors.is_sticky(req.error):
+                self._sticky = req.error
+            if req.stream is not None and req.stream._error is None:
+                req.stream._error = req.error
+
+    # -------- attempts: retry ladder + graceful degradation --------
+
+    def _ladder(self, req: LaunchRequest) -> List[Tuple[Any, str]]:
+        """The fallback rungs for this request, most-capable first.
+        Only knobs the caller left on ``'auto'`` may degrade — an
+        explicitly requested backend/warp_exec is honored and fails as
+        requested.  Every rung computes bitwise-identical outputs by
+        the backend-equivalence contract (scan/serial is the reference
+        semantics every other cell is tested against)."""
+        rungs: List[Tuple[Any, str]] = [(req.rl, "as-resolved")]
+        rl = req.rl
+        if rl.warp_exec == "batched" and req.req_warp_exec == "auto":
+            rl = dataclasses.replace(rl, warp_exec="serial")
+            rungs.append((rl, "warp_exec=serial"))
+        if rl.backend == "vmap" and req.req_backend == "auto":
+            rl = dataclasses.replace(rl, backend="scan")
+            rungs.append((rl, "backend=scan"))
+        return rungs
+
+    def _run_attempts(self, req: LaunchRequest, name: str) -> Dict[str, Any]:
+        """Try the request down its degradation ladder; each rung gets
+        the bounded transient retry.  A sticky error aborts the ladder
+        (the device is gone, no rung can help)."""
+        rungs = self._ladder(req)
+        last: Optional[BaseException] = None
+        for i, (rl, tag) in enumerate(rungs):
+            req.rl = rl                  # re-stage on this rung's knobs
+            try:
+                return self._attempt_with_retry(req, name)
+            except Exception as e:
+                if _errors.is_sticky(e):
+                    raise
+                last = e
+                if i + 1 < len(rungs):
+                    event = {"kernel": name, "seq": req.seq,
+                             "from": tag, "to": rungs[i + 1][1],
+                             "error": repr(e)}
+                    with self._lock:
+                        self.degradations += 1
+                        self.degradation_log.append(event)
+        assert last is not None
+        raise last
+
+    def _attempt_with_retry(self, req: LaunchRequest,
+                            name: str) -> Dict[str, Any]:
+        attempt = 0
+        while True:
+            try:
+                return self._attempt(req, name)
+            except Exception as e:
+                if (_errors.is_sticky(e) or not _errors.is_transient(e)
+                        or attempt >= self.retry_limit):
+                    raise
+                with self._lock:
+                    self.retries += 1
+                time.sleep(self.retry_backoff_s * (2 ** attempt))
+                attempt += 1
+
+    def _attempt(self, req: LaunchRequest, name: str) -> Dict[str, Any]:
+        """One stage+dispatch attempt, with the fault-injection consults
+        (``repro.core.faults``) at each lifecycle site.  Injected
+        dispatch faults fire *before* the executable runs, so a donating
+        request's buffers survive for the fallback rung."""
+        fault = _faults.consume("stage", name)
+        if fault is not None:
+            raise fault
+        try:
+            _, exe = self.stage(req)      # may trace/compile — no _lock
+        except Exception as e:
+            raise _errors.classify(e, site="stage", what=f"kernel '{name}'")
+        fault = _faults.consume("sticky-device", name)
+        if fault is not None:
+            raise fault
+        fault = _faults.consume("dispatch", name)
+        if fault is not None:
+            raise fault
+        try:
+            outputs = exe(req.globals_, req.scalars)   # async dispatch
+        except Exception as e:
+            raise _errors.classify(e, site="dispatch",
+                                   what=f"kernel '{name}'")
+        if _faults.consume("timeout", name) is not None:
+            req.injected_hang = True      # outputs never report ready
+        return outputs
 
     def flush(self) -> None:
         """Dispatch every pending request in topological order.  The
@@ -726,49 +1019,191 @@ class Dispatcher:
             self.flush()
 
     def _prune_inflight(self) -> None:
+        # DAG descendants of a still-hung launch must stay resident even
+        # if their own outputs report ready (only possible under a
+        # simulated hang): when the hang resolves into CoxTimeoutError,
+        # _fail_descendants_locked has to find them to fail them.  Deps
+        # point at earlier seqs and _inflight iterates in seq order, so
+        # one pass tracks hang-blocked seqs transitively.
+        blocked: set = set()
         for seq in list(self._inflight):
             r = self._inflight[seq]
             if r.error is not None:
-                continue                 # kept until its sync re-raises
+                # retained (bounded) until surfaced — a dropped handle
+                # must not leak its request forever
+                del self._inflight[seq]
+                self._retain_errored(r)
+                continue
+            if r.injected_hang:
+                blocked.add(seq)
+                continue                 # "hung": never reports ready
+            if blocked and not blocked.isdisjoint((*r.deps, *r.data_deps)):
+                blocked.add(seq)
+                continue
             if _outputs_ready(r.outputs):
                 del self._inflight[seq]
+                self._drop_producers(r)
+
+    def _retain_errored(self, r: LaunchRequest) -> None:
+        self._errored[r.seq] = r
+        while len(self._errored) > self.error_log_max:
+            _, old = self._errored.popitem(last=False)
+            self._drop_producers(old)
+
+    def _drop_producers(self, req: LaunchRequest) -> None:
+        for i in req.out_ids:
+            entry = self._out_producers.get(i)
+            if entry is not None and entry[1] == req.seq:
+                del self._out_producers[i]
+        req.out_ids = []
 
     # ---------------- synchronization ----------------
 
+    def _surface_locked(self, req: LaunchRequest) -> None:
+        """The request's error reached the caller: mark it surfaced and
+        un-poison its stream if this error is what poisoned it — a
+        surfaced non-sticky error leaves the stream usable, exactly
+        CUDA's cudaGetLastError contract.  Caller holds ``_lock``."""
+        req.surfaced = True
+        s = req.stream
+        if s is not None and s._error is req.error:
+            s._error = None
+
     def forget(self, req: LaunchRequest) -> None:
-        """Drop a request from the in-flight set (its error/result has
-        been surfaced to the caller)."""
+        """Drop a request from the in-flight/errored sets (its
+        error/result has been surfaced to the caller)."""
         with self._lock:
             self._inflight.pop(req.seq, None)
+            self._errored.pop(req.seq, None)
+            self._drop_producers(req)
+            if req.error is not None:
+                self._surface_locked(req)
 
     def sync_request(self, req: LaunchRequest) -> None:
-        """Flush, then block until this request's outputs are ready."""
+        """Flush, then block until this request's outputs are ready.
+        A failed request raises its typed error *here* — at its own
+        sync — and surfacing it reclaims the bookkeeping entry."""
         self.dispatch_through(req)
+        if req.error is None:
+            self._await_request(req)
         self.forget(req)
         if req.error is not None:
             raise req.error
-        _block_outputs(req.outputs)
+
+    def _await_request(self, req: LaunchRequest,
+                       extra: Optional[List[LaunchRequest]] = None) -> None:
+        """Block until the dispatched request's outputs are ready,
+        enforcing the per-launch deadline when configured.  On failure
+        (deadline, or an async error surfacing in the wait) the error is
+        recorded on ``req`` and its DAG descendants fail fast."""
+        deadline = self.launch_deadline_s
+        if deadline is None and req.injected_hang:
+            deadline = 0.0               # a hang with no deadline would spin
+        name = req.ck.kernel.name
+        if deadline is None:
+            try:
+                _block_outputs(req.outputs)
+            except Exception as e:
+                err = _errors.classify(e, site="dispatch",
+                                       what=f"kernel '{name}'")
+                self._record_async_failure(req, err, extra)
+            return
+        with self._wd_lock:              # one deadline wait at a time
+            wd = self.watchdog
+            if wd is None or wd.deadline_s != deadline:
+                wd = StepWatchdog(deadline_s=deadline,
+                                  max_strikes=self.max_strikes)
+                self.watchdog = wd
+            wd.start(step=req.seq)
+            try:
+                while True:
+                    if not req.injected_hang and _outputs_ready(req.outputs):
+                        try:
+                            _block_outputs(req.outputs)
+                        except Exception as e:
+                            err = _errors.classify(e, site="dispatch",
+                                                   what=f"kernel '{name}'")
+                            self._record_async_failure(req, err, extra)
+                        return
+                    if wd.fired:
+                        err = CoxTimeoutError(
+                            f"kernel '{name}' (seq {req.seq}) exceeded "
+                            f"its launch deadline of {deadline}s")
+                        with self._lock:
+                            self.timeouts += 1
+                        self._record_async_failure(req, err, extra)
+                        return
+                    time.sleep(DEADLINE_POLL_S)
+            finally:
+                wd.stop()
+
+    def _record_async_failure(self, req: LaunchRequest, err: BaseException,
+                              extra: Optional[List[LaunchRequest]] = None,
+                              ) -> None:
+        """A failure detected *after* dispatch (deadline expiry, async
+        error in the wait): record it and fail the DAG descendants."""
+        with self._lock:
+            req.error = err
+            self._last_error = err
+            self.failures += 1
+            if _errors.is_sticky(err):
+                self._sticky = err
+            if req.stream is not None and req.stream._error is None:
+                req.stream._error = err
+            self._fail_descendants_locked(req, err, extra)
+
+    def _fail_descendants_locked(self, req: LaunchRequest,
+                                 err: BaseException,
+                                 extra: Optional[List[LaunchRequest]] = None,
+                                 ) -> None:
+        """Mark every (transitive) DAG descendant of ``req`` failed with
+        :class:`CoxDependencyError` — their outputs were computed from
+        (or will depend on) a failed launch.  Deps always point to
+        earlier seqs, so one ascending pass reaches the fixpoint."""
+        root = _errors.root_of(err)
+        failed = {req.seq}
+        pool: Dict[int, LaunchRequest] = {}
+        for r in list(self._pending.values()) + list(self._inflight.values()) \
+                + list(extra or ()):
+            pool[r.seq] = r
+        for seq in sorted(pool):
+            r = pool[seq]
+            if seq in failed or r.error is not None:
+                continue
+            if (set(r.deps) | set(r.data_deps)) & failed:
+                r.error = CoxDependencyError(
+                    f"kernel '{r.ck.kernel.name}' (seq {seq}) depends on "
+                    f"failed launch seq {req.seq}: "
+                    f"{type(root).__name__}: {root}", root=root)
+                if r.stream is not None and r.stream._error is None:
+                    r.stream._error = r.error
+                failed.add(seq)
 
     def _take_inflight(self, stream: Optional[Stream]) -> List[LaunchRequest]:
-        """Atomically remove (and return, seq-ordered) the in-flight
-        requests of ``stream`` — or of every stream when ``None``.  The
-        caller blocks on them *outside* the lock, so concurrent
-        enqueues/flushes never wait on device completion."""
+        """Atomically remove (and return, seq-ordered) the in-flight —
+        and retained errored — requests of ``stream``, or of every
+        stream when ``None``.  The caller blocks on them *outside* the
+        lock, so concurrent enqueues/flushes never wait on device
+        completion."""
         with self._lock:
             taken = []
-            for seq in sorted(self._inflight):
-                r = self._inflight[seq]
-                if stream is None or r.stream is stream:
-                    del self._inflight[seq]
-                    taken.append(r)
-            return taken
+            for pool in (self._inflight, self._errored):
+                for seq in list(pool):
+                    r = pool[seq]
+                    if stream is None or r.stream is stream:
+                        del pool[seq]
+                        taken.append(r)
+                        self._drop_producers(r)
+            return sorted(taken, key=lambda r: r.seq)
 
     def sync_stream(self, stream: Optional[Stream]) -> None:
         """Block until every launch enqueued on ``stream`` completed
-        (``None``: on any stream).  The first deferred launch error of
-        the synced set is raised, CUDA's sticky-async-error analogue.
-        Illegal while any stream of this dispatcher is capturing —
-        CUDA invalidates an active capture on a device-wide sync."""
+        (``None``: on any stream).  The *earliest* deferred launch error
+        of the synced set is raised, CUDA's async-error-at-sync
+        analogue; every error in the set counts as surfaced (the stream
+        is left usable unless the error was sticky).  Illegal while any
+        stream of this dispatcher is capturing — CUDA invalidates an
+        active capture on a device-wide sync."""
         if stream is not None and stream._capture is not None:
             raise CoxUnsupported(
                 f"cannot synchronize {stream!r} during stream capture — "
@@ -780,18 +1215,121 @@ class Dispatcher:
                 f"capturing — a capture records the schedule without "
                 f"running it; end_capture() first")
         self.flush()
-        errs = []
-        for r in self._take_inflight(stream):
-            if r.error is not None:
-                errs.append(r.error)
-                continue
-            _block_outputs(r.outputs)
-        if errs:
-            raise errs[0]
+        taken = self._take_inflight(stream)
+        for r in taken:
+            if r.error is None:
+                # a failure here marks descendants in `taken` via extra
+                self._await_request(r, extra=taken)
+        pairs = [(r.seq, r.error) for r in taken if r.error is not None]
+        with self._lock:
+            for r in taken:
+                if r.error is not None:
+                    self._surface_locked(r)
+            if stream is not None and stream._error is not None:
+                # the poisoning request was evicted/collected — surface
+                # the bare stream error so reset-by-sync still works
+                pairs.append((float("inf"), stream._error))
+                stream._error = None
+        if pairs:
+            raise min(pairs, key=lambda p: p[0])[1]
+        if self._sticky is not None:
+            raise self._sticky           # CUDA: sticky errors never clear
 
     def sync_all(self) -> None:
         """Device-wide barrier (CUDA ``cudaDeviceSynchronize``)."""
         self.sync_stream(None)
+
+    # ------------- error surface (cudaGetLastError analogues) -------------
+
+    @property
+    def error_log(self) -> List[LaunchRequest]:
+        """The retained (un-surfaced, handle-dropped) failed requests,
+        oldest first — bounded at ``error_log_max``."""
+        with self._lock:
+            return list(self._errored.values())
+
+    def get_last_error(self) -> Optional[BaseException]:
+        """Return and *clear* the last launch error (``cudaGetLastError``).
+        A sticky error is returned but never cleared — only
+        :meth:`device_reset` recovers a poisoned device.  Consuming an
+        error counts as surfacing it: matching retained requests are
+        marked surfaced and their streams un-poisoned."""
+        with self._lock:
+            if self._sticky is not None:
+                return self._sticky
+            err = self._last_error
+            self._last_error = None
+            if err is not None:
+                for pool in (self._errored, self._inflight):
+                    for r in list(pool.values()):
+                        if r.error is err:
+                            self._surface_locked(r)
+            return err
+
+    def peek_at_last_error(self) -> Optional[BaseException]:
+        """The last launch error without clearing it
+        (``cudaPeekAtLastError``)."""
+        with self._lock:
+            return (self._sticky if self._sticky is not None
+                    else self._last_error)
+
+    def release_stream_errors(self, stream: Stream) -> None:
+        """Retire (mark surfaced, drop retention for) every failed
+        request of ``stream`` — the dispatcher half of
+        ``stream.reset()``."""
+        with self._lock:
+            for pool in (self._inflight, self._errored):
+                for seq in list(pool):
+                    r = pool[seq]
+                    if r.stream is stream and r.error is not None:
+                        del pool[seq]
+                        self._drop_producers(r)
+                        r.surfaced = True
+            for r in self._pending.values():
+                if r.stream is stream and r.error is not None:
+                    r.surfaced = True
+
+    def device_reset(self) -> "Dispatcher":
+        """The ``cudaDeviceReset`` analogue: clear the sticky error, the
+        last-error register, every retained failed request, and every
+        stream's poisoned state.  In-flight successful work is left
+        untouched (we have no device contexts to tear down)."""
+        with self._lock:
+            self._sticky = None
+            self._last_error = None
+            for r in self._errored.values():
+                self._drop_producers(r)
+                r.surfaced = True
+            self._errored.clear()
+            for seq in list(self._inflight):
+                r = self._inflight[seq]
+                if r.error is not None:
+                    self._drop_producers(r)
+                    r.surfaced = True
+                    del self._inflight[seq]
+            for r in self._pending.values():
+                if r.error is not None:
+                    r.surfaced = True
+            for s in set(self._tails) | {self.default}:
+                s._error = None
+        return self
+
+    def health(self) -> Dict[str, Any]:
+        """Counters for monitoring a long-lived dispatcher — the serving
+        layer and the benchmark gate read these."""
+        with self._lock:
+            return {
+                "failures": self.failures,
+                "retries": self.retries,
+                "degradations": self.degradations,
+                "timeouts": self.timeouts,
+                "errored_retained": len(self._errored),
+                "inflight": len(self._inflight),
+                "pending": len(self._pending),
+                "sticky": repr(self._sticky) if self._sticky else None,
+                "watchdog_strikes": (self.watchdog.strikes
+                                     if self.watchdog else 0),
+            }
 
 
 # ---------------------------------------------------------------------------
@@ -809,3 +1347,22 @@ def get_dispatcher() -> Dispatcher:
 def synchronize() -> None:
     """Device-wide barrier over the default dispatcher."""
     _DISPATCHER.sync_all()
+
+
+def get_last_error() -> Optional[BaseException]:
+    """Return-and-clear the default dispatcher's last launch error —
+    the ``cudaGetLastError`` analogue (sticky errors are returned but
+    never cleared)."""
+    return _DISPATCHER.get_last_error()
+
+
+def peek_at_last_error() -> Optional[BaseException]:
+    """The default dispatcher's last launch error, not cleared — the
+    ``cudaPeekAtLastError`` analogue."""
+    return _DISPATCHER.peek_at_last_error()
+
+
+def device_reset() -> Dispatcher:
+    """Clear sticky/poisoned error state on the default dispatcher —
+    the ``cudaDeviceReset`` analogue."""
+    return _DISPATCHER.device_reset()

@@ -18,6 +18,16 @@ from typing import Callable, Dict, Optional
 
 
 class StepWatchdog:
+    """Arm with :meth:`start` before a step, disarm with :meth:`stop`
+    after it; a step that outlives ``deadline_s`` is a *strike* (the
+    timer fires, the event is recorded, ``on_straggler`` runs).  A
+    generation counter makes the lifecycle safe against the three
+    classic timer races: ``start()`` while armed cancels the leaked
+    prior timer, a healthy ``stop()`` resets the strike count (only
+    *consecutive* stragglers accumulate toward ``max_strikes``), and a
+    ``_fire`` racing a concurrent ``stop()`` observes a stale
+    generation and does nothing (no fire-after-cancel)."""
+
     def __init__(self, deadline_s: float, on_straggler: Optional[Callable] = None,
                  max_strikes: int = 3):
         self.deadline_s = deadline_s
@@ -27,24 +37,49 @@ class StepWatchdog:
         self.events: list = []
         self._timer: Optional[threading.Timer] = None
         self._step = -1
+        self._lock = threading.Lock()
+        self._gen = 0        # bumped by every start()/stop()
+        self._fired_gen = -1  # generation whose timer fired
 
     def start(self, step: int):
-        self._step = step
-        self._timer = threading.Timer(self.deadline_s, self._fire)
-        self._timer.daemon = True
-        self._timer.start()
+        with self._lock:
+            if self._timer is not None:
+                self._timer.cancel()     # re-arm: drop the leaked timer
+            self._gen += 1
+            self._step = step
+            timer = threading.Timer(self.deadline_s, self._fire,
+                                    args=(self._gen,))
+            timer.daemon = True
+            self._timer = timer
+        timer.start()
 
-    def _fire(self):
-        self.strikes += 1
-        self.events.append({"step": self._step, "time": time.time(),
-                            "strikes": self.strikes})
-        if self.on_straggler:
-            self.on_straggler(self._step, self.strikes)
+    def _fire(self, gen: int):
+        with self._lock:
+            if gen != self._gen:         # lost the race to stop()/start()
+                return
+            self._fired_gen = gen
+            self.strikes += 1
+            self.events.append({"step": self._step, "time": time.time(),
+                                "strikes": self.strikes})
+            cb, step, strikes = self.on_straggler, self._step, self.strikes
+        if cb:                           # callback outside the lock
+            cb(step, strikes)
+
+    @property
+    def fired(self) -> bool:
+        """True once the *currently armed* step's deadline expired."""
+        with self._lock:
+            return self._fired_gen == self._gen
 
     def stop(self):
-        if self._timer is not None:
-            self._timer.cancel()
-            self._timer = None
+        with self._lock:
+            if self._timer is not None:
+                self._timer.cancel()
+                self._timer = None
+            healthy = self._fired_gen != self._gen
+            self._gen += 1               # invalidate any in-flight _fire
+            if healthy:
+                self.strikes = 0         # a healthy step clears the count
 
     def check(self):
         if self.strikes >= self.max_strikes:

@@ -18,6 +18,7 @@ end (``RequestKernelPool.collect``).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 from typing import Any, Dict, List, Optional
 
@@ -137,13 +138,24 @@ class RequestKernelPool:
     ``submit`` enqueues the request's kernel on its slot's stream and
     returns immediately (the handle is a future — XLA async dispatch);
     the serving loop never blocks on postprocessing.  ``collect``
-    synchronizes every stream once, at the end."""
+    synchronizes every stream once, at the end.
+
+    A faulting slot is **isolated**, not fatal: its typed
+    :class:`~repro.core.errors.CoxError` surfaces at that handle's own
+    sync, the failed request is retired, the slot's stream is reset
+    (un-poisoned) so it stays usable, and the remaining slots complete
+    normally.  ``health`` carries the pool counters."""
 
     def __init__(self, n_slots: int, nbins: int = 64):
         self.nbins = nbins
         self.streams = [cox.Stream(name=f"req-slot{i}")
                         for i in range(n_slots)]
         self.handles: List[cox.LaunchHandle] = []
+        self._meta: List[tuple] = []      # (slot, n_tokens) per handle
+        self.ok_tokens = 0                # tokens binned by completed slots
+        self.health: Dict[str, Any] = {
+            "submitted": 0, "completed": 0, "failed": 0,
+            "failed_slots": [], "errors": []}
 
     def submit(self, slot: int, tokens: List[int]) -> None:
         toks = np.asarray(tokens, np.int32)
@@ -155,11 +167,27 @@ class RequestKernelPool:
             _token_hist, grid=-(-n // block), block=block,
             args=(np.zeros(self.nbins, np.int32), toks, n, self.nbins))
         self.handles.append(h)
+        self._meta.append((slot, n))
+        self.health["submitted"] += 1
 
     def collect(self) -> List[np.ndarray]:
-        """Synchronize all streams and return each request's histogram
-        (in completion order)."""
-        return [np.asarray(h.result()["hist"]) for h in self.handles]
+        """Synchronize all streams and return each completed request's
+        histogram (in completion order), isolating faulting slots."""
+        hists: List[np.ndarray] = []
+        for (slot, n), h in zip(self._meta, self.handles):
+            try:
+                hists.append(np.asarray(h.result()["hist"]))
+                self.health["completed"] += 1
+                self.ok_tokens += n
+            except cox.CoxError as e:
+                # the failed request is already retired by its surfaced
+                # sync; reset clears any residual stream poisoning so
+                # the slot can serve the next request
+                self.health["failed"] += 1
+                self.health["failed_slots"].append(slot)
+                self.health["errors"].append(repr(e))
+                self.streams[slot].reset()
+        return hists
 
 
 class BatchedServer:
@@ -268,7 +296,7 @@ class BatchedServer:
 
 def serve_requests(arch: str, *, batch: int, ctx: int, n_requests: int,
                    max_tokens: int, seed: int = 0, postproc: bool = False,
-                   graph: bool = False) -> Dict[str, Any]:
+                   graph: bool = False, chaos: bool = False) -> Dict[str, Any]:
     """Continuous batching over a queue of synthetic prompt requests.
 
     With ``postproc=True`` every finished request's token histogram is
@@ -281,7 +309,15 @@ def serve_requests(arch: str, *, batch: int, ctx: int, n_requests: int,
     ``cox.Graph`` and *replayed* every token — one fused XLA call
     instead of three launches' worth of host-side dispatch.  A shadow
     eager pipeline runs the same steps and the final statistics are
-    asserted bitwise-equal."""
+    asserted bitwise-equal.
+
+    With ``chaos=True`` (requires ``postproc``) the first postprocess
+    launch is forced to fail via ``cox.faults`` — the fault-injection
+    drill: the faulting slot is isolated and every other slot must
+    complete with its histogram totals intact."""
+    if chaos and not postproc:
+        raise ValueError("chaos=True requires postproc=True "
+                         "(it faults the postprocess pool)")
     rng = np.random.default_rng(seed)
     server = BatchedServer(arch, batch=batch, ctx=ctx, seed=seed)
     pool = RequestKernelPool(batch) if postproc else None
@@ -293,31 +329,58 @@ def serve_requests(arch: str, *, batch: int, ctx: int, n_requests: int,
              for _ in range(n_requests)]
     done: List[List[int]] = []
     t0 = time.time()
-    while queue or server.active.any():
-        for slot in range(batch):
-            if not server.active[slot] and queue:
-                server.prefill_prompt(slot, queue.pop(0))
-        server.decode(max_tokens, pipelines=pipelines)
-        for slot in range(batch):
-            if not server.active[slot] and server.outputs[slot]:
-                done.append(server.outputs[slot])
-                if pool is not None:
-                    pool.submit(slot, server.outputs[slot])
-                server.outputs[slot] = []
-    out: Dict[str, Any] = {}
-    if pool is not None:
-        hists = pool.collect()          # one sync for all streams
-        out["postproc"] = {
-            "requests": len(hists),
-            "hist_tokens": int(sum(int(h.sum()) for h in hists)),
-        }
+    with contextlib.ExitStack() as stack:
+        if chaos:
+            # deterministically fail the first postprocess dispatch
+            stack.enter_context(cox.faults.inject(
+                "_token_hist", site="dispatch", index=0, times=1))
+        while queue or server.active.any():
+            for slot in range(batch):
+                if not server.active[slot] and queue:
+                    server.prefill_prompt(slot, queue.pop(0))
+            server.decode(max_tokens, pipelines=pipelines)
+            for slot in range(batch):
+                if not server.active[slot] and server.outputs[slot]:
+                    done.append(server.outputs[slot])
+                    if pool is not None:
+                        pool.submit(slot, server.outputs[slot])
+                    server.outputs[slot] = []
+        out: Dict[str, Any] = {}
+        if pool is not None:
+            hists = pool.collect()      # one sync for all streams
+            out["postproc"] = {
+                "requests": len(hists),
+                "hist_tokens": int(sum(int(h.sum()) for h in hists)),
+                "failed": pool.health["failed"],
+                "health": dict(pool.health),
+            }
     dt = time.time() - t0
     total_tokens = sum(len(o) for o in done)
     out.update({"completed": len(done), "tokens": total_tokens,
                 "wall_s": dt, "tok_per_s": total_tokens / max(dt, 1e-9)})
+    out["dispatch_health"] = cox.get_dispatcher().health()
     if pool is not None:
-        # the histograms were binned from exactly the emitted tokens
-        assert out["postproc"]["hist_tokens"] == total_tokens
+        # the completed histograms were binned from exactly the tokens
+        # their requests emitted — a faulted slot subtracts only its own
+        assert out["postproc"]["hist_tokens"] == pool.ok_tokens
+        if not chaos:
+            assert pool.health["failed"] == 0
+            assert out["postproc"]["hist_tokens"] == total_tokens
+            # a clean run must never lean on the fault-tolerance
+            # machinery: a ladder rung here would mask a real regression
+            dh = out["dispatch_health"]
+            assert dh["degradations"] == 0 and dh["sticky"] is None, dh
+        else:
+            # one injected fault; the blast radius is CUDA-faithful —
+            # the faulting slot's stream is poisoned, so every request
+            # it had in flight fails as a CoxDependencyError descendant,
+            # and every *other* slot completes untouched
+            h = pool.health
+            assert h["failed"] >= 1 and set(h["failed_slots"]) == {0}, h
+            assert h["completed"] == h["submitted"] - h["failed"], h
+            roots = [e for e in h["errors"]
+                     if not e.startswith("CoxDependencyError")]
+            assert len(roots) == 1 and "injected" in roots[0], h
     if graph:
         g_stats, e_stats = (p.collect() for p in pipelines)
         for k in g_stats:               # replay ≡ eager, bitwise
@@ -343,15 +406,22 @@ def main():
                     help="capture the per-token stats pipeline once as a "
                          "cox.Graph and replay it every decode step "
                          "(verified bitwise against eager launches)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-injection drill: force the first "
+                         "postprocess launch to fail and assert the "
+                         "remaining slots complete with correct totals "
+                         "(requires --postproc)")
     args = ap.parse_args()
     out = serve_requests(args.arch, batch=args.batch, ctx=args.ctx,
                          n_requests=args.requests, max_tokens=args.tokens,
-                         postproc=args.postproc, graph=args.graph)
+                         postproc=args.postproc, graph=args.graph,
+                         chaos=args.chaos)
     msg = (f"served {out['completed']} requests, {out['tokens']} tokens, "
            f"{out['tok_per_s']:.1f} tok/s")
     if args.postproc:
         msg += (f" (+{out['postproc']['requests']} postproc kernels, "
-                f"{out['postproc']['hist_tokens']} tokens binned)")
+                f"{out['postproc']['hist_tokens']} tokens binned, "
+                f"{out['postproc']['failed']} faulted)")
     if args.graph:
         msg += (f" (graph replay: {out['graph']['steps']} steps, "
                 f"{out['graph']['hist_tokens']} tokens binned, "

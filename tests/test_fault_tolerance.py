@@ -1,0 +1,473 @@
+"""Chaos suite: the CUDA-faithful error model under injected faults.
+
+Semantics under test (README "Error model & fault tolerance"):
+
+* a failed launch surfaces its *typed* ``CoxError`` at its own sync;
+* DAG descendants — stream program order, ``Event.wait`` edges,
+  ``handle.outputs`` data edges — fail fast with ``CoxDependencyError``
+  and are never dispatched on stale inputs, while non-faulting siblings
+  stay bitwise-correct;
+* streams are poisoned until the error is surfaced (or ``reset()``);
+  sticky ``CoxDeviceError`` poisons every enqueue until
+  ``device_reset()``; ``get_last_error``/``peek_at_last_error`` follow
+  the ``cudaGetLastError`` contract;
+* transient failures get a bounded retry-with-backoff; non-transient
+  failures on auto knobs walk the degradation ladder (batched→serial,
+  vmap→scan) bitwise-correctly; explicit knobs never degrade;
+* a per-launch deadline turns a hung launch into ``CoxTimeoutError``;
+* captured graphs: a failing node fails the whole replay with the
+  node's typed error; a failing fused executable falls back to eager
+  replay bitwise-correctly;
+* the serving pool isolates a faulting slot;
+* errored-request retention stays bounded when handles are dropped.
+"""
+import os
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.core import cox  # noqa: E402
+from repro.core import faults  # noqa: E402
+from repro.core.errors import (CoxCompileError,  # noqa: E402
+                               CoxDependencyError, CoxDeviceError,
+                               CoxError, CoxLaunchError, CoxTimeoutError)
+from repro.core.streams import Dispatcher, Stream  # noqa: E402
+
+
+@cox.kernel
+def _ft_saxpy(c, out: cox.Array(cox.f32), x: cox.Array(cox.f32),
+              y: cox.Array(cox.f32), n: cox.i32):
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    if i < n:
+        out[i] = 2.5 * x[i] + y[i]
+
+
+@cox.kernel
+def _ft_scale(c, out: cox.Array(cox.f32), x: cox.Array(cox.f32), n: cox.i32):
+    i = c.block_idx() * c.block_dim() + c.thread_idx()
+    if i < n:
+        out[i] = x[i] * 3.0 + 1.0
+
+
+@cox.kernel
+def _ft_warpstage(c, out: cox.Array(cox.f32), a: cox.Array(cox.f32)):
+    """Shared memory + warp collective + block barrier: auto-resolves
+    to backend='vmap', warp_exec='batched' at block=128, so the full
+    batched→serial→scan degradation ladder is walkable."""
+    tile = c.shared((4,), cox.f32)
+    tid = c.thread_idx()
+    v = a[c.block_idx() * c.block_dim() + tid]
+    s = c.red_add(v)
+    if c.lane_id() == 0:
+        tile[c.warp_id()] = s
+    c.syncthreads()
+    t = tile[tid % 4]
+    out[c.block_idx() * c.block_dim() + tid] = v + t
+
+
+def _args(n=1024, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    return (np.zeros(n, np.float32), x, y, np.int32(n))
+
+
+def _fresh(**kw):
+    d = Dispatcher(**kw)
+    return d, Stream("a", d), Stream("b", d)
+
+
+def _saxpy_want(args):
+    return 2.5 * args[1] + args[2]
+
+
+def _scale_want(stream, x, n=1024):
+    """Bitwise reference for ``_ft_scale``: a clean launch of the same
+    kernel (XLA may fuse multiply-add, so a numpy expression is only
+    close, not bitwise-equal)."""
+    h = stream.launch(_ft_scale, grid=4, block=256,
+                      args=(np.zeros(n, np.float32), x, np.int32(n)))
+    return np.asarray(h.result()["out"])
+
+
+# ---------------------------------------------------------------------------
+# typed surfacing at the failing request's own sync
+# ---------------------------------------------------------------------------
+
+
+def test_injected_dispatch_fault_is_typed_and_surfaces_at_own_sync():
+    d, s1, s2 = _fresh()
+    args = _args()
+    want = _scale_want(s2, args[1])
+    with faults.inject("_ft_saxpy", site="dispatch") as spec:
+        bad = s1.launch(_ft_saxpy, grid=4, block=256, args=args)
+        good = s2.launch(_ft_scale, grid=4, block=256,
+                         args=(np.zeros(1024, np.float32), args[1], 1024))
+    assert spec.fired == 1
+    # the sibling on the other stream is untouched, bitwise
+    np.testing.assert_array_equal(np.asarray(good.result()["out"]), want)
+    with pytest.raises(CoxLaunchError, match="injected dispatch fault"):
+        bad.result()
+    # surfacing reclaimed the bookkeeping and un-poisoned the stream
+    assert bad.request.seq not in d._inflight
+    assert bad.request.seq not in d._errored
+    assert s1.error is None
+    # outputs were never produced — nothing dispatched on stale inputs
+    assert bad.request.outputs is None
+
+
+def test_stage_fault_is_cox_compile_error():
+    d, s1, _ = _fresh()
+    with faults.inject("_ft_saxpy", site="stage"):
+        bad = s1.launch(_ft_saxpy, grid=4, block=256, args=_args())
+    with pytest.raises(CoxCompileError, match="injected stage fault"):
+        bad.result()
+    # raising at the sync surfaced it, but last-error persists until
+    # get_last_error consumes it (the cudaGetLastError contract)
+    assert isinstance(d.get_last_error(), CoxCompileError)
+    assert d.peek_at_last_error() is None
+
+
+# ---------------------------------------------------------------------------
+# DAG failure propagation: one test per edge kind
+# ---------------------------------------------------------------------------
+
+
+def test_program_order_descendant_fails_fast():
+    d, s1, s2 = _fresh()
+    args = _args()
+    want = _scale_want(s2, args[1])
+    with faults.inject("_ft_saxpy", site="dispatch"):
+        bad = s1.launch(_ft_saxpy, grid=4, block=256, args=args)
+        dep = s1.launch(_ft_scale, grid=4, block=256,
+                        args=(np.zeros(1024, np.float32), args[1], 1024))
+        sib = s2.launch(_ft_scale, grid=4, block=256,
+                        args=(np.zeros(1024, np.float32), args[1], 1024))
+    with pytest.raises(CoxDependencyError) as ei:
+        dep.result()
+    assert isinstance(ei.value.root, CoxLaunchError)
+    # the descendant was failed fast, never dispatched on stale inputs
+    assert dep.request.outputs is None
+    with pytest.raises(CoxLaunchError):
+        bad.result()
+    np.testing.assert_array_equal(np.asarray(sib.result()["out"]), want)
+
+
+def test_event_edge_descendant_fails_fast():
+    d, s1, s2 = _fresh()
+    args = _args()
+    want = _scale_want(s2, args[1])
+    sib = s2.launch(_ft_scale, grid=4, block=256,
+                    args=(np.zeros(1024, np.float32), args[1], 1024))
+    with faults.inject("_ft_saxpy", site="dispatch"):
+        bad = s1.launch(_ft_saxpy, grid=4, block=256, args=args)
+    ev = s1.record_event()
+    s2.wait_event(ev)
+    dep = s2.launch(_ft_scale, grid=4, block=256,
+                    args=(np.zeros(1024, np.float32), args[1], 1024))
+    with pytest.raises(CoxDependencyError):
+        dep.result()
+    assert dep.request.outputs is None
+    # the sibling launched before the event edge is bitwise-correct
+    np.testing.assert_array_equal(np.asarray(sib.result()["out"]), want)
+    with pytest.raises(CoxLaunchError):
+        bad.result()
+
+
+def test_data_edge_descendant_fails_fast_after_timeout():
+    """handle.outputs edges: a launch consuming a (later-)timed-out
+    producer's outputs fails at its sync with CoxDependencyError."""
+    d, s1, s2 = _fresh()
+    args = _args()
+    want = _scale_want(s2, args[1])
+    # the sibling precedes the consumer in s2's program order, so the
+    # consumer's dependency failure cannot poison it
+    sib = s2.launch(_ft_scale, grid=4, block=256,
+                    args=(np.zeros(1024, np.float32), args[1], 1024))
+    with faults.inject("_ft_saxpy", site="timeout"):
+        prod = s1.launch(_ft_saxpy, grid=4, block=256, args=args)
+    # dispatch succeeded; the hang is only detected at prod's sync
+    cons = s2.launch(_ft_scale, grid=4, block=256,
+                     args=(np.zeros(1024, np.float32),
+                           prod.outputs["out"], 1024))
+    assert prod.request.seq in cons.request.data_deps
+    with pytest.raises(CoxTimeoutError):
+        s1.synchronize()
+    with pytest.raises(CoxDependencyError) as ei:
+        cons.result()
+    assert isinstance(ei.value.root, CoxTimeoutError)
+    np.testing.assert_array_equal(np.asarray(sib.result()["out"]), want)
+
+
+# ---------------------------------------------------------------------------
+# stream poisoning, reset, get_last_error
+# ---------------------------------------------------------------------------
+
+
+def test_unsurfaced_error_poisons_stream_until_reset():
+    d, s1, _ = _fresh()
+    args = _args()
+    with faults.inject("_ft_saxpy", site="dispatch"):
+        bad = s1.launch(_ft_saxpy, grid=4, block=256, args=args)
+    del bad                               # handle dropped, never surfaced
+    assert isinstance(s1.error, CoxLaunchError)
+    poisoned = s1.launch(_ft_saxpy, grid=4, block=256, args=args)
+    with pytest.raises(CoxDependencyError):
+        poisoned.result()
+    s1.reset()
+    assert s1.error is None
+    ok = s1.launch(_ft_saxpy, grid=4, block=256, args=args)
+    np.testing.assert_allclose(np.asarray(ok.result()["out"]),
+                               _saxpy_want(args), rtol=1e-5, atol=1e-6)
+
+
+def test_get_last_error_returns_and_clears():
+    d, s1, _ = _fresh()
+    with faults.inject("_ft_saxpy", site="dispatch"):
+        s1.launch(_ft_saxpy, grid=4, block=256, args=_args())
+    err = d.peek_at_last_error()
+    assert isinstance(err, CoxLaunchError)
+    assert d.peek_at_last_error() is err       # peek never clears
+    assert d.get_last_error() is err           # get returns...
+    assert d.get_last_error() is None          # ...and clears
+    assert s1.error is None                    # consuming = surfacing
+    ok = s1.launch(_ft_saxpy, grid=4, block=256, args=_args())
+    np.testing.assert_allclose(np.asarray(ok.result()["out"]),
+                               _saxpy_want(_args()), rtol=1e-5, atol=1e-6)
+
+
+def test_sticky_device_error_poisons_until_device_reset():
+    d, s1, s2 = _fresh()
+    args = _args()
+    with faults.inject("_ft_saxpy", site="sticky-device"):
+        bad = s1.launch(_ft_saxpy, grid=4, block=256, args=args)
+    with pytest.raises(CoxDeviceError):
+        bad.result()
+    # sticky: every subsequent enqueue fails synchronously, any stream
+    with pytest.raises(CoxDeviceError):
+        s2.launch(_ft_scale, grid=4, block=256,
+                  args=(np.zeros(1024, np.float32), args[1], 1024))
+    # sticky errors are returned but never cleared by get_last_error
+    assert isinstance(d.get_last_error(), CoxDeviceError)
+    assert isinstance(d.get_last_error(), CoxDeviceError)
+    with pytest.raises(CoxDeviceError):
+        s1.synchronize()
+    d.device_reset()
+    assert d.peek_at_last_error() is None
+    ok = s2.launch(_ft_saxpy, grid=4, block=256, args=args)
+    np.testing.assert_allclose(np.asarray(ok.result()["out"]),
+                               _saxpy_want(args), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# per-launch deadline (watchdog wiring)
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_turns_hang_into_timeout_and_recovers():
+    d, s1, _ = _fresh(launch_deadline_s=0.05)
+    args = _args()
+    with faults.inject("_ft_saxpy", site="timeout"):
+        hung = s1.launch(_ft_saxpy, grid=4, block=256, args=args)
+    with pytest.raises(CoxTimeoutError, match="deadline"):
+        hung.result()
+    assert d.timeouts == 1
+    assert d.watchdog is not None and d.watchdog.strikes == 1
+    # a healthy launch under the same deadline completes and clears the
+    # strike count (consecutive-straggler semantics)
+    ok = s1.launch(_ft_saxpy, grid=4, block=256, args=args)
+    np.testing.assert_allclose(np.asarray(ok.result()["out"]),
+                               _saxpy_want(args), rtol=1e-5, atol=1e-6)
+    assert d.watchdog.strikes == 0
+
+
+# ---------------------------------------------------------------------------
+# retry (transient) + degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_transient_fault_cleared_by_bounded_retry():
+    d, s1, _ = _fresh()
+    args = _args()
+    with faults.inject("_ft_saxpy", site="dispatch", transient=True,
+                       times=2) as spec:
+        h = s1.launch(_ft_saxpy, grid=4, block=256, args=args)
+        np.testing.assert_allclose(np.asarray(h.result()["out"]),
+                                   _saxpy_want(args), rtol=1e-5, atol=1e-6)
+    assert spec.fired == 2
+    assert d.retries == 2
+    assert d.degradations == 0            # retry is not a ladder rung
+    assert d.failures == 0
+
+
+def test_transient_retry_exhaustion_surfaces_the_error():
+    d, s1, _ = _fresh()
+    with faults.inject("_ft_saxpy", site="dispatch", transient=True,
+                       times=None):      # fires on every attempt
+        h = s1.launch(_ft_saxpy, grid=4, block=256, args=_args())
+        with pytest.raises(CoxLaunchError):
+            h.result()
+    assert d.retries == d.retry_limit
+
+
+def _ws_args(seed=3):
+    a = np.random.default_rng(seed).integers(-8, 9, 256).astype(np.float32)
+    return (np.zeros(256, np.float32), a)
+
+
+def test_ladder_batched_to_serial_is_bitwise():
+    d, s1, _ = _fresh()
+    args = _ws_args()
+    want = np.asarray(
+        s1.launch(_ft_warpstage, grid=2, block=128,
+                  args=args).result()["out"])
+    assert d.degradations == 0            # clean run: no fallback
+    with faults.inject("_ft_warpstage", site="dispatch", times=1):
+        h = s1.launch(_ft_warpstage, grid=2, block=128, args=args)
+        got = np.asarray(h.result()["out"])
+    np.testing.assert_array_equal(got, want)
+    assert d.degradations == 1
+    ev = d.degradation_log[-1]
+    assert ev["from"] == "as-resolved" and ev["to"] == "warp_exec=serial"
+    assert d.failures == 0                # the launch ultimately succeeded
+
+
+def test_ladder_walks_to_scan_when_serial_also_fails():
+    d, s1, _ = _fresh()
+    args = _ws_args(seed=4)
+    want = np.asarray(
+        s1.launch(_ft_warpstage, grid=2, block=128,
+                  args=args).result()["out"])
+    with faults.inject("_ft_warpstage", site="dispatch", times=2):
+        h = s1.launch(_ft_warpstage, grid=2, block=128, args=args)
+        got = np.asarray(h.result()["out"])
+    np.testing.assert_array_equal(got, want)
+    assert d.degradations == 2
+    assert [e["to"] for e in list(d.degradation_log)[-2:]] == \
+        ["warp_exec=serial", "backend=scan"]
+
+
+def test_explicit_knobs_never_degrade():
+    d, s1, _ = _fresh()
+    args = _ws_args(seed=5)
+    with faults.inject("_ft_warpstage", site="dispatch", times=1):
+        h = s1.launch(_ft_warpstage, grid=2, block=128, args=args,
+                      backend="vmap", warp_exec="batched")
+        with pytest.raises(CoxLaunchError):
+            h.result()
+    assert d.degradations == 0
+
+
+# ---------------------------------------------------------------------------
+# graphs: node-typed staging errors + replay → eager fallback
+# ---------------------------------------------------------------------------
+
+
+def test_graph_node_stage_fault_fails_replay_with_node_error():
+    d, s1, _ = _fresh()
+    g = cox.Graph(name="ft-graph-stage")
+    args = _args()
+    with g.capture(s1):
+        h0 = s1.launch(_ft_saxpy, grid=4, block=256, args=args)
+        s1.launch(_ft_scale, grid=4, block=256,
+                  args=(np.zeros(1024, np.float32), h0.outputs["out"], 1024))
+    with faults.inject("_ft_scale", site="stage"):
+        with pytest.raises(CoxCompileError, match="injected stage fault"):
+            g.replay()
+
+
+def test_graph_replay_falls_back_to_eager_bitwise():
+    d, s1, _ = _fresh()
+    g = cox.Graph(name="ft-graph-replay")
+    args = _args(seed=7)
+    with g.capture(s1):
+        h0 = s1.launch(_ft_saxpy, grid=4, block=256, args=args)
+        s1.launch(_ft_scale, grid=4, block=256,
+                  args=(np.zeros(1024, np.float32), h0.outputs["out"], 1024))
+    exe = g.instantiate()
+    want = {k: np.asarray(v) for k, v in exe.replay().items()}
+    with faults.inject("ft-graph-replay", site="dispatch", times=1) as spec:
+        got = {k: np.asarray(v) for k, v in exe.replay().items()}
+    assert spec.fired == 1
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+    assert d.degradations == 1
+    ev = d.degradation_log[-1]
+    assert ev["from"] == "graph-replay" and ev["to"] == "eager"
+    # a user error (unknown binding) is never swallowed by the fallback
+    with pytest.raises(KeyError):
+        exe.replay(nope=np.zeros(4, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# serving pool: slot isolation
+# ---------------------------------------------------------------------------
+
+
+def test_request_pool_isolates_faulting_slot():
+    from repro.launch.serve import RequestKernelPool
+    pool = RequestKernelPool(3, nbins=8)
+    with faults.inject("_token_hist", site="dispatch", index=0, times=1):
+        pool.submit(0, [1, 2, 3])         # this one is forced to fail
+        pool.submit(1, [4, 4, 4, 4])
+        pool.submit(2, [5, 6])
+        hists = pool.collect()
+    assert pool.health["submitted"] == 3
+    assert pool.health["failed"] == 1 and pool.health["failed_slots"] == [0]
+    assert pool.health["completed"] == 2 and len(hists) == 2
+    np.testing.assert_array_equal(
+        hists[0], np.bincount(np.array([4, 4, 4, 4]) % 8, minlength=8))
+    np.testing.assert_array_equal(
+        hists[1], np.bincount(np.array([5, 6]) % 8, minlength=8))
+    assert pool.ok_tokens == 6
+    # the faulted slot's stream was reset — it serves the next request
+    pool.submit(0, [7])
+    assert np.asarray(pool.handles[-1].result()["hist"]).sum() == 1
+    cox.get_last_error()     # drain the default dispatcher's last-error
+
+
+# ---------------------------------------------------------------------------
+# bounded retention (the _inflight leak regression)
+# ---------------------------------------------------------------------------
+
+
+def test_errored_retention_stays_bounded_under_repeated_failures():
+    d, s1, _ = _fresh(error_log_max=8)
+    with faults.inject("_ft_saxpy", site="stage", times=None):
+        for _ in range(40):
+            s1.launch(_ft_saxpy, grid=4, block=256, args=_args())
+            # handle dropped every iteration — never synced
+    assert len(d._errored) <= 8
+    assert not d._pending
+    assert all(r.error is None for r in d._inflight.values())
+    assert d.health()["errored_retained"] <= 8
+    assert d.failures == 40
+    # the retained tail is still surfaced via get_last_error
+    assert isinstance(d.get_last_error(),
+                      (CoxCompileError, CoxDependencyError))
+    assert d.get_last_error() is None
+
+
+def test_fault_scope_ends_with_the_context():
+    d, s1, _ = _fresh()
+    args = _args(seed=9)
+    with faults.inject("_ft_saxpy", site="dispatch"):
+        pass                              # armed and disarmed, never hit
+    assert faults.active() == []
+    h = s1.launch(_ft_saxpy, grid=4, block=256, args=args)
+    np.testing.assert_allclose(np.asarray(h.result()["out"]),
+                               _saxpy_want(args), rtol=1e-5, atol=1e-6)
+    assert d.failures == 0
+
+
+def test_typed_hierarchy_is_exported():
+    for cls in (CoxError, CoxCompileError, CoxLaunchError, CoxTimeoutError,
+                CoxDependencyError, CoxDeviceError):
+        assert getattr(cox, cls.__name__) is cls
+    assert cox.faults is faults
+    assert callable(cox.get_last_error)
+    assert callable(cox.peek_at_last_error)
+    assert callable(cox.device_reset)
+    assert issubclass(CoxDeviceError, CoxError) and CoxDeviceError.sticky

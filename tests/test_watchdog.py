@@ -1,0 +1,111 @@
+"""StepWatchdog unit tests: strike reset, restart, and fire/stop races.
+
+The watchdog is the per-step (and, via the dispatcher, per-launch)
+deadline primitive, so its state machine has to be exact:
+
+* a healthy ``start``/``stop`` cycle resets the consecutive-strike
+  count (only *consecutive* stragglers escalate);
+* ``start`` while already armed replaces the previous timer instead of
+  leaking it (no double-fire for one step);
+* a timer that fires after ``stop`` (the fire/stop race) is a stale
+  generation and must not strike the *next* step.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.ft.watchdog import StepWatchdog
+
+
+def test_strikes_reset_after_healthy_step():
+    wd = StepWatchdog(deadline_s=0.02, max_strikes=3)
+    wd.start(step=0)
+    time.sleep(0.08)
+    assert wd.fired and wd.strikes == 1
+    wd.stop()
+    # a healthy step clears the consecutive-straggler count
+    wd.start(step=1)
+    wd.stop()
+    assert wd.strikes == 0
+    wd.check()                      # no escalation after recovery
+
+
+def test_straggler_streak_escalates_at_max_strikes():
+    wd = StepWatchdog(deadline_s=0.01, max_strikes=2)
+    for step in range(2):
+        wd.start(step=step)
+        time.sleep(0.05)
+        wd.stop()
+    assert wd.strikes == 2
+    with pytest.raises(TimeoutError, match="straggler"):
+        wd.check()
+
+
+def test_double_start_replaces_timer_without_double_fire():
+    events = []
+    wd = StepWatchdog(deadline_s=0.03, max_strikes=10,
+                      on_straggler=lambda step, strikes:
+                      events.append((step, strikes)))
+    wd.start(step=0)
+    wd.start(step=1)                # re-arm before step 0's timer fires
+    time.sleep(0.1)
+    wd.stop()
+    # exactly one fire, attributed to the re-armed step
+    assert wd.strikes == 1
+    assert events == [(1, 1)]
+
+
+def test_stale_fire_after_stop_is_ignored():
+    wd = StepWatchdog(deadline_s=0.05, max_strikes=3)
+    wd.start(step=0)
+    wd.stop()                       # healthy: cancel before the deadline
+    # even if the cancelled timer thread were to run, its generation is
+    # stale — simulate the race by invoking the callback directly
+    wd._fire(wd._gen - 1)
+    assert wd.strikes == 0 and not wd.fired
+    wd.start(step=1)
+    wd._fire(wd._gen - 1)           # stale fire must not strike step 1
+    assert not wd.fired
+    wd.stop()
+    assert wd.strikes == 0
+
+
+def test_fired_is_per_generation():
+    wd = StepWatchdog(deadline_s=0.01, max_strikes=10)
+    wd.start(step=0)
+    time.sleep(0.05)
+    assert wd.fired
+    wd.stop()
+    wd.start(step=1)                # new generation: not fired yet
+    assert not wd.fired
+    wd.stop()
+
+
+def test_on_straggler_called_outside_lock():
+    """The callback may reenter the watchdog (e.g. to read strikes)
+    without deadlocking."""
+    seen = {}
+    done = threading.Event()
+    wd = StepWatchdog(deadline_s=0.01, max_strikes=10)
+
+    def cb(step, strikes):
+        seen["strikes"] = wd.strikes      # reentrant read
+        seen["step"] = step
+        done.set()
+
+    wd.on_straggler = cb
+    wd.start(step=7)
+    assert done.wait(timeout=2.0)
+    wd.stop()
+    assert seen == {"strikes": 1, "step": 7}
+
+
+def test_events_record_step_and_strike_count():
+    wd = StepWatchdog(deadline_s=0.01, max_strikes=10)
+    wd.start(step=3)
+    time.sleep(0.05)
+    wd.stop()
+    assert len(wd.events) == 1
+    ev = wd.events[0]
+    assert ev["step"] == 3 and ev["strikes"] == 1 and "time" in ev
