@@ -20,6 +20,10 @@ flagship kernels only).
   graph_replay  — CUDA graphs: a depth-d chain of dependent launches
                   captured once into a cox.Graph and replayed per token
                   vs eager per-launch dispatch, bitwise asserted
+  placement     — multi-device stream placement: 4 streams round-robined
+                  over 1/2/4/8-device pools (subprocess, 8 forced host
+                  devices), bitwise equality vs the 1-device pool
+                  asserted + throughput ratio per pool size
   scalability   — Fig. 14: blocks across host devices (subprocess, 8 dev)
   roofline      — §Roofline terms from results/dryrun_all.json (if present)
 """
@@ -50,6 +54,11 @@ RESULTS = []         # every CSV row, as dicts
 SWEEP_RESULTS = []   # structured backend_sweep matrix
 STREAM_RESULTS = []  # structured streams-overlap cells
 GRAPH_RESULTS = []   # structured graph-replay cells
+PLACEMENT_RESULTS = []  # structured multi-device placement cells
+
+# device-pool sizes every placement run must cover — module-level so the
+# CI regression gate (benchmarks/check_smoke.py) can assert coverage
+PLACEMENT_DEVICES = (1, 2, 4, 8)
 
 # chain depths every graph_replay run must cover — module-level so the
 # CI regression gate (benchmarks/check_smoke.py) can assert coverage
@@ -262,6 +271,13 @@ def backend_sweep():
                                     backend=backend, warp_exec=warp_exec,
                                     simd=simd, **kw)
 
+        # what the all-auto heuristics resolve to — recorded so the CI
+        # gate can flag an autotune pick that lands on the slowest
+        # measured cell (make_request resolves eagerly, no dispatch)
+        rl_auto = sk.kernel.make_request(grid=sk.grid, block=sk.block,
+                                         args=args).rl
+        auto_cell = f"{rl_auto.backend}_{rl_auto.warp_exec}"
+
         base = run("scan")
         times = {}
         cells = [(b, we, True) for b in backends
@@ -285,9 +301,11 @@ def backend_sweep():
         wb = times["scan_serial"] / times["scan_batched"]
         derived += f";vmap_speedup={times['scan_serial'] / times['vmap_serial']:.2f}x"
         derived += f";warp_batch_speedup={wb:.2f}x"
+        derived += f";auto_cell={auto_cell}"
         entry = {
             "kernel": sk.name, "grid": sk.grid, "block": sk.block,
             "n_warps": n_warps, "features": sk.features or "none",
+            "auto_cell": auto_cell,
             "times_us": {c: round(t, 1) for c, t in times.items()},
             "warp_batch_speedup_scan": round(wb, 2),
             "warp_batch_speedup_vmap": round(
@@ -492,6 +510,41 @@ def graph_replay():
 # ---------------------------------------------------------------------------
 
 
+def placement():
+    """Multi-device stream placement: the same 4-stream program over
+    1/2/4/8-device pools (8-dev subprocess — the device count must be
+    set before jax initializes).  The worker asserts bitwise equality
+    against the 1-device pool and reports the throughput ratio; each
+    entry records the host's core count because XLA host devices
+    time-share physical cores (the scaling gate is cpus-conditional)."""
+    worker = os.path.join(os.path.dirname(__file__), "placement_worker.py")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    iters = 3 if SMOKE else max(ITERS, 5)
+    r = subprocess.run([sys.executable, worker, "--iters", str(iters)],
+                       capture_output=True, text=True, env=env, timeout=1200)
+    for line in r.stdout.splitlines():
+        if line.startswith("PLACEMENT_JSON "):
+            PLACEMENT_RESULTS.extend(
+                json.loads(line[len("PLACEMENT_JSON "):]))
+            continue
+        # re-emit through _row so the worker's rows reach --json too
+        parts = line.split(",", 2)
+        if len(parts) == 3:
+            try:
+                _row(parts[0], float(parts[1]), parts[2])
+                continue
+            except ValueError:
+                pass
+        print(line, flush=True)
+    if r.returncode != 0:
+        _row("placement.FAILED", 0.0, r.stderr[-200:].replace("\n", ";"))
+
+
+# ---------------------------------------------------------------------------
+
+
 def scalability():
     """Fig. 14: multi-block kernels across host devices (8-dev subprocess
     — device count must be set before jax initializes)."""
@@ -539,6 +592,7 @@ SECTIONS = {
     "backend_sweep": backend_sweep,
     "streams": streams,
     "graph_replay": graph_replay,
+    "placement": placement,
     "scalability": scalability,
     "roofline": roofline,
 }
@@ -547,10 +601,10 @@ SECTIONS = {
 def main(argv=None) -> None:
     global WARMUP, ITERS, SMOKE
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--json", nargs="?", const="BENCH_PR6.json", default=None,
+    p.add_argument("--json", nargs="?", const="BENCH_PR8.json", default=None,
                    metavar="PATH",
                    help="write machine-readable results (default path "
-                        "BENCH_PR6.json when the flag is given bare)")
+                        "BENCH_PR8.json when the flag is given bare)")
     p.add_argument("--sections", default=None,
                    help=f"comma-separated subset of {sorted(SECTIONS)}")
     p.add_argument("--smoke", action="store_true",
@@ -568,7 +622,7 @@ def main(argv=None) -> None:
         SECTIONS[name]()
     if args.json:
         payload = {
-            "schema": "cox-bench-v2",
+            "schema": "cox-bench-v3",
             "smoke": SMOKE,
             "iters": ITERS,
             "sections": names,
@@ -576,6 +630,7 @@ def main(argv=None) -> None:
             "backend_sweep": SWEEP_RESULTS,
             "streams": STREAM_RESULTS,
             "graph_replay": GRAPH_RESULTS,
+            "placement": PLACEMENT_RESULTS,
             # fault-tolerance counters for the whole run: a clean bench
             # must never have taken a degradation-ladder rung (a rung
             # means the timed configuration is not the resolved one)

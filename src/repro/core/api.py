@@ -20,6 +20,7 @@ from . import errors  # noqa: F401  (cox.errors — typed error hierarchy)
 from . import faults  # noqa: F401  (cox.faults — fault injection)
 from . import flat as _flat
 from . import kernel_ir as K
+from . import placement  # noqa: F401  (cox.placement — device policies)
 from . import runtime as _runtime
 from . import streams as _streams
 from .backends.plan import bind_kernel_args, check_donate_supported
@@ -35,6 +36,9 @@ from .streams import (Event, default_stream, synchronize,  # noqa: F401
 from .streams import (device_reset, get_last_error,  # noqa: F401
                       peek_at_last_error)  # cudaGetLastError analogues
 from .streams import _mesh_key  # noqa: F401  (compat re-export for tests)
+from .placement import (AffinityPlacement,  # noqa: F401  (placement API)
+                        HealthAwarePlacement, PlacementPolicy,
+                        RoundRobinPlacement)
 from .types import (CoxUnsupported, DType, Dim3, WARP_SIZE,  # noqa: F401
                     GraphRef, as_dim3)  # Dim3 re-exported: launch geometry
 
@@ -106,13 +110,25 @@ class KernelFn:
                      simd: bool = True, warp_size: int = WARP_SIZE,
                      mesh=None, axis: str = "data", backend: str = "auto",
                      chunk: Optional[int] = None, warp_exec: str = "auto",
-                     donate: bool = False) -> _streams.LaunchRequest:
+                     donate: bool = False,
+                     device: Any = None) -> _streams.LaunchRequest:
         """Resolve the launch knobs and bind the arguments into a
         :class:`~repro.core.streams.LaunchRequest` — the unit the stream
         dispatcher consumes.  Compilation (the pass pipeline) and knob
         resolution happen here, eagerly, so bad launches fail at the
         call site; staging and dispatch happen later, behind the
-        dispatcher."""
+        dispatcher.
+
+        ``device=`` pins the launch to one XLA device (multi-device
+        placement; mutually exclusive with ``mesh``, which spans its
+        own device set) — left ``None``, the dispatcher's placement
+        policy assigns the stream a device when its pool is
+        multi-device."""
+        if device is not None and mesh is not None:
+            raise CoxUnsupported(
+                f"kernel '{self.name}': device= and mesh= are mutually "
+                f"exclusive — a sharded launch spans the mesh's own "
+                f"devices; placement applies to single-device launches")
         block3 = as_dim3(block, "block")
         token = self._compile_key(collapse=collapse, warp_size=warp_size,
                                   block=block3.total)
@@ -127,7 +143,7 @@ class KernelFn:
         return _streams.LaunchRequest(
             ck=ck, token=token, rl=rl, simd=simd, chunk=chunk, mesh=mesh,
             axis=axis, donate=donate, globals_=globals_, shapes=shapes,
-            scalars=scalars,
+            scalars=scalars, device=device,
             # pre-resolution knobs: the degradation ladder may only fall
             # back along rungs the caller left on 'auto'
             req_backend=backend, req_warp_exec=warp_exec)
@@ -138,6 +154,7 @@ class KernelFn:
                mesh=None, axis: str = "data", backend: str = "auto",
                chunk: Optional[int] = None,
                warp_exec: str = "auto", donate: bool = False,
+               device: Any = None,
                stream: Optional[Stream] = None) -> Dict[str, Any]:
         """Launch with backend dispatch (see ``repro.core.backends``):
         enqueue on the (default) stream and dispatch — the async CUDA
@@ -157,8 +174,9 @@ class KernelFn:
 
         ``donate=True`` donates the flat global buffers to the staged
         executable (buffer reuse instead of copies — the bound arrays
-        are consumed); ``stream=`` enqueues on a non-default
-        :class:`cox.Stream` instead.
+        are consumed); ``device=`` pins the launch to one XLA device
+        (see :meth:`make_request`); ``stream=`` enqueues on a
+        non-default :class:`cox.Stream` instead.
 
         The returned arrays are XLA futures, exactly as before the
         stream refactor — the launch is *dispatched* (host errors
@@ -170,7 +188,7 @@ class KernelFn:
             grid=grid, block=block, args=args, collapse=collapse,
             mode=mode, simd=simd, warp_size=warp_size, mesh=mesh,
             axis=axis, backend=backend, chunk=chunk, warp_exec=warp_exec,
-            donate=donate, stream=stream).arrays()
+            donate=donate, device=device, stream=stream).arrays()
 
     def launch_async(self, *, stream: Optional[Stream] = None,
                      **knobs) -> LaunchHandle:

@@ -235,7 +235,7 @@ class Graph:
 
     # ------------------------- instantiate -------------------------
 
-    def instantiate(self, dispatcher=None) -> "GraphExec":
+    def instantiate(self, dispatcher=None, *, device=None) -> "GraphExec":
         """Stage the captured DAG as one fused executable and return a
         fresh :class:`GraphExec` bound to the captured input values.
 
@@ -244,7 +244,14 @@ class Graph:
         instantiating a structurally identical second capture — traces
         and compiles exactly once (the second call is a stage hit);
         each :class:`GraphExec` still carries its *own* rebindable
-        input state."""
+        input state.
+
+        ``device=`` places the instantiated graph: every replay commits
+        its inputs to that device and runs there (CUDA: a graph
+        launches into a stream on one device).  Left ``None``, the
+        graph inherits the placed/pinned device of a capturing stream,
+        if any — so a DAG captured on a placed stream replays where the
+        stream's eager launches would have run."""
         if self._streams:
             raise CoxUnsupported(
                 f"{self!r} is still capturing on "
@@ -265,7 +272,13 @@ class Graph:
 
         exe, raw_fn = disp.stage_graph(key, builder)
         self._frozen = True                # the DAG is baked in; no edits
-        return GraphExec(self, disp, exe, raw_fn, spec)
+        if device is None:
+            # inherit a capturing stream's placement (pin or policy
+            # assignment) — replay runs where eager issue would have
+            device = next((s._device for s in self._tails
+                           if getattr(s, "_device", None) is not None),
+                          None)
+        return GraphExec(self, disp, exe, raw_fn, spec, device=device)
 
     def replay(self, **bindings) -> Dict[str, Any]:
         """Instantiate lazily (once), then replay — the one-call CUDA
@@ -418,11 +431,12 @@ class GraphExec:
     (``cudaGraphExecKernelNodeSetParams`` semantics)."""
 
     def __init__(self, graph: Graph, disp, exe, raw_fn,
-                 spec: Dict[str, Any]):
+                 spec: Dict[str, Any], *, device=None):
         self._graph = graph
         self._disp = disp
         self._exe = exe
         self._raw_fn = raw_fn        # un-jitted fallback (eager rung)
+        self._device = device        # placed replay target (None: legacy)
         self._aliases = spec["aliases"]
         self._outputs = spec["outputs"]
         self._vals = {}
@@ -436,6 +450,11 @@ class GraphExec:
     @property
     def graph(self) -> Graph:
         return self._graph
+
+    @property
+    def device(self):
+        """The device replays run on (``None``: unplaced legacy path)."""
+        return self._device
 
     @property
     def input_names(self) -> Tuple[str, ...]:
@@ -458,6 +477,21 @@ class GraphExec:
                     f"graph {self._graph.name!r} has no input {name!r}; "
                     f"inputs: {sorted(self._vals)}")
         gname = self._graph.name
+        dev = self._device
+        if dev is not None:
+            from .streams import _to_device
+            with self._disp._lock:
+                sticky = self._disp._sticky_for(dev)
+            if sticky is not None:
+                # a placed graph replays on *its* device — a poisoned
+                # device fails the replay with its sticky error (route-
+                # around is a placement-time decision, not a replay one)
+                raise sticky
+            # the transfer node: commit inputs to the placed device
+            # (no-op for already-resident buffers) and keep the
+            # committed arrays so later replays skip the put
+            self._vals = {k: _to_device(v, dev)
+                          for k, v in self._vals.items()}
         fault = _faults.consume("dispatch", gname)
         try:
             if fault is not None:
@@ -480,6 +514,8 @@ class GraphExec:
                 disp.degradations += 1
                 disp.degradation_log.append(event)
             flat = self._raw_fn(dict(self._vals))
+        with self._disp._lock:
+            self._disp._bump_dev(dev, "dispatches")
         return {c: v.reshape(self._out_shapes[c]) for c, v in flat.items()}
 
     __call__ = replay

@@ -1,0 +1,144 @@
+"""Stream → device placement policies (the multi-device scale-out layer).
+
+A single XLA device executes one computation at a time, so PR 5's
+stream overlap is host/device pipelining — independent streams still
+serialize through one executor queue.  This module gives the
+:class:`~repro.core.streams.Dispatcher` a *placement* layer: each
+non-default stream is assigned a device from the dispatcher's pool, so
+launches on different streams execute **concurrently on different XLA
+devices** — the CUDA multi-queue concurrency model, realized as one
+committed-device jit program per stream.
+
+Granularity is the stream, not the launch: launches within a stream are
+in-order anyway, so spreading one stream over several devices buys no
+concurrency and pays a transfer per hop.  A policy therefore picks a
+device the first time a stream's work is dispatched and the stream
+keeps it (device affinity) until the device is poisoned by a sticky
+:class:`~repro.core.errors.CoxDeviceError` — then the policy re-picks
+among the healthy survivors (health-aware routing instead of a
+process-wide failure).
+
+What stays single-device: the default stream (CUDA's "current device"),
+mesh/sharded launches (they span their own device set), and any
+dispatcher whose pool has one device — all three keep the exact legacy
+dispatch path, no transfers inserted.
+
+Policies:
+
+* :class:`RoundRobinPlacement` — deal streams over the pool in arrival
+  order; the default.
+* :class:`AffinityPlacement` — prefer the device where the request's
+  committed input buffers (e.g. a donated carry) already live, falling
+  back to round-robin; saves the cross-device copy for relaunch-over-
+  same-buffers loops.
+* :class:`HealthAwarePlacement` — prefer the device with the cleanest
+  per-device ``health()`` counters (fewest failures + degradations),
+  round-robin among ties.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, List, Optional
+
+
+def resident_device(val) -> Optional[Any]:
+    """The single device a *committed* jax.Array lives on, else None
+    (uncommitted arrays report the default device — that is a
+    placement default, not an affinity signal)."""
+    if not getattr(val, "_committed", False):
+        return None
+    try:
+        devs = val.devices()
+    except (AttributeError, TypeError):
+        return None
+    if len(devs) == 1:
+        return next(iter(devs))
+    return None
+
+
+class PlacementPolicy:
+    """Base policy: stream affinity + pluggable ``pick``.
+
+    ``place(req, devices, disp)`` is the dispatcher's entry point:
+    ``devices`` is the current *healthy* pool (sticky-poisoned devices
+    already routed out).  A stream that already holds a healthy device
+    keeps it; otherwise ``pick`` chooses and the stream records the
+    choice.  Subclasses implement :meth:`pick` only."""
+
+    name = "policy"
+
+    def place(self, req, devices: List[Any], disp) -> Any:
+        stream = getattr(req, "stream", None)
+        if stream is not None:
+            held = stream._device
+            if held is not None and any(d.id == held.id for d in devices):
+                return held
+            dev = self.pick(req, devices, disp)
+            stream._device = dev
+            return dev
+        return self.pick(req, devices, disp)
+
+    def pick(self, req, devices: List[Any], disp) -> Any:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+class RoundRobinPlacement(PlacementPolicy):
+    """Deal streams over the healthy pool in arrival order."""
+
+    name = "round-robin"
+
+    def __init__(self):
+        self._counter = itertools.count()
+
+    def pick(self, req, devices, disp):
+        return devices[next(self._counter) % len(devices)]
+
+
+class AffinityPlacement(PlacementPolicy):
+    """Prefer the device where the request's committed input buffers
+    already live — the donated-carry case: a stream relaunching over
+    the buffers a previous launch produced should land where they are,
+    not pay a transfer to honor a rotation."""
+
+    name = "affinity"
+
+    def __init__(self):
+        self._fallback = RoundRobinPlacement()
+
+    def pick(self, req, devices, disp):
+        votes = {}
+        for val in (req.globals_ or {}).values():
+            dev = resident_device(val)
+            if dev is not None:
+                votes[dev.id] = votes.get(dev.id, 0) + 1
+        if votes:
+            best = max(votes, key=votes.get)
+            for d in devices:
+                if d.id == best:
+                    return d
+        return self._fallback.pick(req, devices, disp)
+
+
+class HealthAwarePlacement(PlacementPolicy):
+    """Prefer the device with the cleanest per-device health counters
+    (PR 7's bookkeeping): fewest ``failures + degradations``, ties
+    broken round-robin so clean devices still share load."""
+
+    name = "health-aware"
+
+    def __init__(self):
+        self._counter = itertools.count()
+
+    def pick(self, req, devices, disp):
+        stats = disp.device_health()
+
+        def load(dev):
+            c = stats.get(str(dev), {})
+            return c.get("failures", 0) + c.get("degradations", 0)
+
+        best = min(load(d) for d in devices)
+        clean = [d for d in devices if load(d) == best]
+        return clean[next(self._counter) % len(clean)]

@@ -58,6 +58,26 @@ the backend-equivalence contract, and logged as a structured
 degradation event).  A per-launch deadline (``launch_deadline_s``,
 enforced through :class:`~repro.ft.watchdog.StepWatchdog`) turns a
 hung launch into :class:`~repro.core.errors.CoxTimeoutError` at sync.
+
+**Multi-device placement & priorities** (README "Multi-device
+placement"): when the dispatcher's device pool holds more than one
+device, each non-default stream is *placed* on one
+(``repro.core.placement`` policies: round-robin, affinity-by-resident-
+buffers, health-aware) so independent streams execute concurrently on
+different XLA devices — true CUDA multi-queue concurrency, not just
+host/device pipelining.  Placement happens at dispatch: inputs are
+``jax.device_put`` to the stream's device (a no-op for already-resident
+buffers, an explicit async transfer node when a cross-stream data/event
+edge crosses devices), staged executables are per-device (the stage key
+carries the target device), and sticky :class:`~repro.core.errors.
+CoxDeviceError` is scoped to the failing device — placement routes new
+work around a poisoned device; ``device_reset(device=...)`` revives
+one.  ``Stream(priority=...)`` biases the Kahn ready-set: among
+simultaneously-ready requests, lower priority numbers dispatch first
+(CUDA's convention — ``cudaStreamCreateWithPriority``'s
+``greatestPriority`` is the most negative).  The default stream, mesh
+(sharded) launches, and single-device pools keep the exact legacy
+dispatch path.
 """
 from __future__ import annotations
 
@@ -74,6 +94,7 @@ import jax
 
 from . import errors as _errors
 from . import faults as _faults
+from . import placement as _placement
 from . import runtime as _runtime
 from ..ft.watchdog import StepWatchdog
 from .errors import (CoxDependencyError, CoxTimeoutError)
@@ -137,6 +158,26 @@ def _block_outputs(outputs: Dict[str, Any]) -> None:
             jax.block_until_ready(o)
 
 
+def _dev_id(dev) -> Optional[int]:
+    """A stable hashable stand-in for a device in cache keys and the
+    per-device sticky map (``None`` = unplaced / legacy path)."""
+    return None if dev is None else dev.id
+
+
+def _to_device(val, dev):
+    """``jax.device_put`` to ``dev`` unless the value is already
+    resident there — the identity-preserving transfer node.  Returning
+    the original array for already-resident buffers is load-bearing:
+    a donating relaunch over the same globals must see the *same*
+    buffers to alias them instead of copying."""
+    try:
+        if val.devices() == {dev}:
+            return val
+    except (AttributeError, TypeError):
+        pass
+    return jax.device_put(val, dev)
+
+
 def _mesh_key(mesh) -> Any:
     """A hashable stand-in for the mesh in staging-cache keys, built
     from stable content (axis names/sizes + device ids).  Object
@@ -180,6 +221,13 @@ class LaunchRequest:
     # requested knobs are honored and fail as requested
     req_backend: str = "auto"
     req_warp_exec: str = "auto"
+    # target device: an explicit ``device=`` knob pins it here; else the
+    # dispatcher's placement policy fills it at dispatch (stays None on
+    # the single-device / default-stream / mesh legacy paths)
+    device: Any = None
+    # dispatch priority, inherited from the stream at enqueue — lower
+    # numbers dispatch first among simultaneously-ready requests
+    priority: int = 0
     # dispatcher bookkeeping (set at enqueue / dispatch)
     seq: int = -1
     stream: Optional["Stream"] = None
@@ -208,10 +256,12 @@ class LaunchRequest:
         """The staging-cache key *without* the kernel-identity element
         (the dispatcher prepends it).  Same layout as the old
         ``KernelFn._launch_cache`` key — the compile token first, the
-        phase count second — with ``donate`` appended: a donating
-        executable aliases its input buffers and must never be handed a
-        launch that expects copies."""
-        return self.fn_key() + (self.donate,)
+        phase count second — with ``donate`` and the target device
+        appended: a donating executable aliases its input buffers and
+        must never be handed a launch that expects copies, and a placed
+        executable runs on committed inputs so its compiled program is
+        per-device."""
+        return self.fn_key() + (self.donate, _dev_id(self.device))
 
 
 class LaunchHandle:
@@ -303,11 +353,21 @@ class Stream:
 
     def __init__(self, name: Optional[str] = None,
                  dispatcher: Optional["Dispatcher"] = None, *,
+                 priority: int = 0, device: Any = None,
                  _default: bool = False):
         self._disp = dispatcher if dispatcher is not None else get_dispatcher()
         self._default = _default
         self.name = name or ("default" if _default
                              else f"stream{next(self._names)}")
+        # dispatch priority (CUDA cudaStreamCreateWithPriority): lower
+        # numbers dispatch first among simultaneously-ready requests
+        self.priority = int(priority)
+        # placement: an explicit device pins every launch on this stream
+        # to it; otherwise the dispatcher's placement policy assigns one
+        # on first dispatch (multi-device pools only) and the stream
+        # keeps it — device affinity — until it is poisoned
+        self._device = device
+        self._device_pinned = device is not None
         self._wait_deps: List[int] = []   # event edges for the next launch
         self._capture = None              # Graph while capturing, else None
         self._capture_deps: List[int] = []   # captured event edges (node idx)
@@ -323,6 +383,13 @@ class Stream:
     @property
     def is_default(self) -> bool:
         return self._default
+
+    @property
+    def device(self) -> Any:
+        """The device this stream's launches run on: its pin, the
+        placement policy's assignment, or ``None`` (unplaced — the
+        legacy single-device path)."""
+        return self._device
 
     @property
     def dispatcher(self) -> "Dispatcher":
@@ -594,7 +661,9 @@ class Dispatcher:
                  max_strikes: int = 8,
                  error_log_max: int = ERROR_LOG_MAX,
                  retry_limit: int = RETRY_LIMIT,
-                 retry_backoff_s: float = RETRY_BACKOFF_S):
+                 retry_backoff_s: float = RETRY_BACKOFF_S,
+                 devices: Optional[Tuple[Any, ...]] = None,
+                 placement: Optional[Any] = None):
         # _lock guards the queues/caches and is only ever held briefly;
         # _dispatch_lock serializes whole flush drains so concurrent
         # flushes cannot interleave dispatch out of dependency order,
@@ -637,8 +706,27 @@ class Dispatcher:
         # producer's req.outputs holds the array strongly, so the id
         # cannot be recycled while the entry exists.
         self._out_producers: Dict[int, Tuple[Any, int]] = {}
-        self._sticky: Optional[BaseException] = None   # device-poisoning error
+        # device-poisoning errors, scoped per device: key = device id of
+        # the placed request that faulted, or None for an unplaced
+        # (legacy single-device / default-stream / mesh) fault — the
+        # process-wide CUDA behavior.  Placement routes new work around
+        # poisoned devices; enqueue only fails once *no* healthy device
+        # remains (which on a one-device pool is the first sticky fault,
+        # exactly the old contract).
+        self._sticky: "OrderedDict[Optional[int], BaseException]" = \
+            OrderedDict()
         self._last_error: Optional[BaseException] = None   # cudaGetLastError
+        # ---- multi-device placement (repro.core.placement) ----
+        # the device pool is lazy: this constructor runs at module import
+        # (the default dispatcher singleton) and must not initialize jax
+        self._devices = tuple(devices) if devices is not None else None
+        self.placement = placement       # policy; defaults to round-robin
+        # per-device dispatch counters: str(device) (or "default" for
+        # unplaced work) -> {dispatches, failures, degradations}
+        self._dev_counters: Dict[str, Dict[str, int]] = {}
+        # device-id -> display name, learned as devices pass through
+        # (labels sticky-map keys without resolving the lazy pool)
+        self._dev_names: Dict[int, str] = {}
         self.launch_deadline_s = launch_deadline_s
         self.max_strikes = max_strikes
         self.retry_limit = retry_limit
@@ -652,6 +740,107 @@ class Dispatcher:
         self.watchdog: Optional[StepWatchdog] = None   # lazily armed
         self._wd_lock = threading.Lock()   # serializes deadline awaits
         self.default = Stream(dispatcher=self, _default=True)
+
+    # ---------------- placement (multi-device scale-out) ----------------
+
+    @property
+    def devices(self) -> Tuple[Any, ...]:
+        """The device pool streams are placed over (default: every jax
+        device, resolved lazily so constructing a dispatcher — including
+        the import-time singleton — never initializes jax)."""
+        devs = self._devices
+        if devs is None:
+            devs = self._devices = tuple(jax.devices())
+        return devs
+
+    def _healthy_devices(self) -> List[Any]:
+        with self._lock:
+            poisoned = set(self._sticky) - {None}
+        return [d for d in self.devices if d.id not in poisoned]
+
+    def _sticky_blocking(self) -> Optional[BaseException]:
+        """The sticky error that must fail an enqueue/sync outright:
+        an unplaced (device-less) sticky fault poisons the process —
+        the CUDA contract — while placed faults only block once every
+        device in the pool is poisoned (placement routes around
+        anything less)."""
+        with self._lock:
+            if not self._sticky:
+                return None
+            glob = self._sticky.get(None)
+            if glob is not None:
+                return glob
+            if not self._healthy_devices():
+                return next(iter(self._sticky.values()))
+            return None
+
+    def _sticky_for(self, device) -> Optional[BaseException]:
+        """The sticky error covering a request bound for ``device``:
+        its own device's, or — for unplaced work, which runs on the
+        pool's first device — that device's.  Caller holds ``_lock``."""
+        glob = self._sticky.get(None)
+        if glob is not None:
+            return glob
+        if not self._sticky:
+            return None
+        if device is not None:
+            return self._sticky.get(device.id)
+        devs = self.devices
+        return self._sticky.get(devs[0].id) if devs else None
+
+    def _place(self, req: LaunchRequest) -> None:
+        """Assign the request a target device (fills ``req.device``).
+        Explicitly placed requests, mesh (sharded) launches, default-
+        stream launches, and single-device pools keep ``device=None`` —
+        the exact legacy dispatch path, no transfers.  Raises the first
+        sticky error when no healthy device remains."""
+        if req.device is not None or req.mesh is not None:
+            return
+        devices = self.devices
+        if len(devices) <= 1:
+            return
+        s = req.stream
+        if s is None or s.is_default:
+            return                   # CUDA: default stream = current device
+        if s._device_pinned:
+            req.device = s._device
+            return
+        healthy = self._healthy_devices()
+        if not healthy:
+            err = self._sticky_blocking()
+            if err is not None:
+                raise err
+            healthy = list(devices)      # racing device_reset: pool is back
+        pol = self.placement
+        if pol is None:
+            pol = self.placement = _placement.RoundRobinPlacement()
+        req.device = pol.place(req, healthy, self)
+
+    @staticmethod
+    def _dev_of(req: "LaunchRequest"):
+        """The device a request's counters attribute to: its placement,
+        else its stream's (a descendant failed *before* placement still
+        belongs to its stream's device), else None (unplaced)."""
+        if req.device is not None:
+            return req.device
+        s = req.stream
+        return s._device if s is not None else None
+
+    def _bump_dev(self, device, key: str) -> None:
+        """Per-device health counter bump.  Caller holds ``_lock``."""
+        name = str(device) if device is not None else "default"
+        c = self._dev_counters.get(name)
+        if c is None:
+            c = self._dev_counters[name] = {
+                "dispatches": 0, "failures": 0, "degradations": 0}
+        c[key] += 1
+
+    def device_health(self) -> Dict[str, Dict[str, int]]:
+        """Per-device dispatch counters, keyed by ``str(device)``
+        (``"default"`` collects unplaced work) — what
+        :class:`~repro.core.placement.HealthAwarePlacement` reads."""
+        with self._lock:
+            return {k: dict(v) for k, v in self._dev_counters.items()}
 
     # ---------------- enqueue ----------------
 
@@ -668,13 +857,19 @@ class Dispatcher:
                         f"that escaped its graph — captured outputs "
                         f"only exist inside the capture; replay the "
                         f"graph and use its real outputs instead")
-        if self._sticky is not None:
+        blocking = self._sticky_blocking()
+        if blocking is not None:
             # CUDA: after a sticky error every launch fails synchronously
-            # with that error until cudaDeviceReset (device_reset here)
-            raise self._sticky
+            # with that error until cudaDeviceReset (device_reset here).
+            # With a multi-device pool this only fires once every device
+            # is poisoned — placement routes around anything less.
+            raise blocking
         with self._lock:
             req.seq = next(self._seq)
             req.stream = stream
+            req.priority = stream.priority
+            if req.device is None and stream._device_pinned:
+                req.device = stream._device
             deps = []
             tail = self.tail_request(stream)
             if tail is not None:
@@ -812,12 +1007,16 @@ class Dispatcher:
     def _toposorted(self) -> List[LaunchRequest]:
         """Kahn's algorithm over the pending graph: edges are stream
         program order + event edges (``req.deps``, restricted to
-        still-pending requests); ties break FIFO by enqueue order, so
-        the dispatch order is deterministic."""
+        still-pending requests).  The ready-set is a priority heap:
+        among simultaneously-ready requests the lowest stream priority
+        number dispatches first (latency-sensitive streams preempt bulk
+        work in the issue order), with FIFO enqueue-order tie-break so
+        dispatch stays deterministic."""
         pending = self._pending
         indeg = {seq: sum(1 for d in r.deps if d in pending)
                  for seq, r in pending.items()}
-        ready = sorted(seq for seq, n in indeg.items() if n == 0)
+        ready = [(pending[seq].priority, seq)
+                 for seq, n in indeg.items() if n == 0]
         out: List[LaunchRequest] = []
         fwd: Dict[int, List[int]] = {}
         for seq, r in pending.items():
@@ -826,12 +1025,12 @@ class Dispatcher:
                     fwd.setdefault(d, []).append(seq)
         heapq.heapify(ready)
         while ready:
-            seq = heapq.heappop(ready)
+            _, seq = heapq.heappop(ready)
             out.append(pending[seq])
             for nxt in fwd.get(seq, ()):
                 indeg[nxt] -= 1
                 if indeg[nxt] == 0:
-                    heapq.heappush(ready, nxt)
+                    heapq.heappush(ready, (pending[nxt].priority, nxt))
         if len(out) != len(pending):     # impossible by construction:
             raise AssertionError("cycle in launch-dependency graph")
         return out
@@ -843,7 +1042,6 @@ class Dispatcher:
             return
         with self._lock:
             dep_err = self._first_dep_error(req)
-            sticky = self._sticky
         if dep_err is not None:
             # fail fast: never dispatch on a failed upstream's stale
             # outputs — CUDA's poisoned stream simply never runs these
@@ -853,7 +1051,18 @@ class Dispatcher:
                 f"upstream failure {type(root).__name__}: {root}",
                 root=root))
             return
+        try:
+            self._place(req)             # fills req.device (policy/pin)
+        except Exception as e:
+            self._fail_request(req, e)
+            return
+        with self._lock:
+            sticky = self._sticky_for(req.device)
         if sticky is not None:
+            # the request's target device is poisoned (explicit pin, or
+            # unplaced work on a poisoned first device): fail it with
+            # the device's sticky error — placement never *chooses* a
+            # poisoned device, so a policy-placed request cannot land here
             self._fail_request(req, sticky)
             return
         try:
@@ -875,6 +1084,7 @@ class Dispatcher:
                 req.out_ids.append(id(o))
             self._inflight[req.seq] = req
             self.dispatch_log.append(req.seq)   # deque: maxlen-bounded
+            self._bump_dev(self._dev_of(req), "dispatches")
 
     def _first_dep_error(self, req: LaunchRequest) -> Optional[BaseException]:
         """The first un-surfaced failure among the request's DAG parents
@@ -905,8 +1115,9 @@ class Dispatcher:
             self.dispatch_log.append(req.seq)
             self._last_error = req.error
             self.failures += 1
+            self._bump_dev(self._dev_of(req), "failures")
             if _errors.is_sticky(req.error):
-                self._sticky = req.error
+                self._note_sticky_locked(req.device, req.error)
             if req.stream is not None and req.stream._error is None:
                 req.stream._error = req.error
 
@@ -949,6 +1160,7 @@ class Dispatcher:
                              "error": repr(e)}
                     with self._lock:
                         self.degradations += 1
+                        self._bump_dev(self._dev_of(req), "degradations")
                         self.degradation_log.append(event)
         assert last is not None
         raise last
@@ -986,6 +1198,23 @@ class Dispatcher:
         fault = _faults.consume("dispatch", name)
         if fault is not None:
             raise fault
+        if req.device is not None:
+            # the explicit transfer node: commit inputs to the placed
+            # device (async device_put; a no-op returning the same
+            # buffer when already resident, preserving donation
+            # aliasing).  This is where a cross-stream data edge whose
+            # producer landed on another device becomes a D2D copy.
+            # Written back onto the request so retry/ladder rungs — and
+            # a donating relaunch — reuse the transferred buffers.
+            try:
+                req.globals_ = {k: _to_device(v, req.device)
+                                for k, v in req.globals_.items()}
+                if req.scalars:
+                    req.scalars = {k: _to_device(v, req.device)
+                                   for k, v in req.scalars.items()}
+            except Exception as e:
+                raise _errors.classify(e, site="dispatch",
+                                       what=f"kernel '{name}'")
         try:
             outputs = exe(req.globals_, req.scalars)   # async dispatch
         except Exception as e:
@@ -1146,8 +1375,9 @@ class Dispatcher:
             req.error = err
             self._last_error = err
             self.failures += 1
+            self._bump_dev(self._dev_of(req), "failures")
             if _errors.is_sticky(err):
-                self._sticky = err
+                self._note_sticky_locked(req.device, err)
             if req.stream is not None and req.stream._error is None:
                 req.stream._error = err
             self._fail_descendants_locked(req, err, extra)
@@ -1232,8 +1462,9 @@ class Dispatcher:
                 stream._error = None
         if pairs:
             raise min(pairs, key=lambda p: p[0])[1]
-        if self._sticky is not None:
-            raise self._sticky           # CUDA: sticky errors never clear
+        blocking = self._sticky_blocking()
+        if blocking is not None:
+            raise blocking               # CUDA: sticky errors never clear
 
     def sync_all(self) -> None:
         """Device-wide barrier (CUDA ``cudaDeviceSynchronize``)."""
@@ -1255,8 +1486,8 @@ class Dispatcher:
         error counts as surfacing it: matching retained requests are
         marked surfaced and their streams un-poisoned."""
         with self._lock:
-            if self._sticky is not None:
-                return self._sticky
+            if self._sticky:
+                return next(iter(self._sticky.values()))
             err = self._last_error
             self._last_error = None
             if err is not None:
@@ -1270,7 +1501,7 @@ class Dispatcher:
         """The last launch error without clearing it
         (``cudaPeekAtLastError``)."""
         with self._lock:
-            return (self._sticky if self._sticky is not None
+            return (next(iter(self._sticky.values())) if self._sticky
                     else self._last_error)
 
     def release_stream_errors(self, stream: Stream) -> None:
@@ -1289,13 +1520,23 @@ class Dispatcher:
                 if r.stream is stream and r.error is not None:
                     r.surfaced = True
 
-    def device_reset(self) -> "Dispatcher":
-        """The ``cudaDeviceReset`` analogue: clear the sticky error, the
-        last-error register, every retained failed request, and every
-        stream's poisoned state.  In-flight successful work is left
-        untouched (we have no device contexts to tear down)."""
+    def device_reset(self, device: Any = None) -> "Dispatcher":
+        """The ``cudaDeviceReset`` analogue.  With ``device=None``:
+        clear every sticky error, the last-error register, every
+        retained failed request, and every stream's poisoned state.
+        With ``device=`` a device (or device id): clear only *that
+        device's* sticky state, so placement resumes routing to it —
+        the recovery point for a single poisoned device in a
+        multi-device pool (everything else is left untouched).
+        In-flight successful work is never disturbed (we have no
+        device contexts to tear down)."""
+        if device is not None:
+            did = device if isinstance(device, int) else device.id
+            with self._lock:
+                self._sticky.pop(did, None)
+            return self
         with self._lock:
-            self._sticky = None
+            self._sticky.clear()
             self._last_error = None
             for r in self._errored.values():
                 self._drop_producers(r)
@@ -1314,10 +1555,40 @@ class Dispatcher:
                 s._error = None
         return self
 
+    def _note_sticky_locked(self, device, err: BaseException) -> None:
+        """Record a sticky error against its device (``None`` = the
+        process-wide CUDA contract), remembering the device's display
+        name while we hold the object.  Caller holds ``_lock``."""
+        did = _dev_id(device)
+        self._sticky.setdefault(did, err)
+        if did is not None:
+            self._dev_names[did] = str(device)
+
+    def _dev_label(self, did: Optional[int]) -> str:
+        """Human-readable name for a sticky-map key.  Caller holds
+        ``_lock`` (reads ``_devices`` without resolving the lazy pool —
+        a health probe must not initialize jax)."""
+        if did is None:
+            return "unplaced"
+        name = self._dev_names.get(did)
+        if name is not None:
+            return name
+        for d in (self._devices or ()):
+            if d.id == did:
+                return str(d)
+        return f"device:{did}"
+
     def health(self) -> Dict[str, Any]:
         """Counters for monitoring a long-lived dispatcher — the serving
-        layer and the benchmark gate read these."""
+        layer and the benchmark gate read these.  ``devices`` carries
+        the per-device dispatch/failure/degradation counters (the
+        chaos drill asserts a fault stays confined to one device);
+        ``sticky_devices`` the currently-poisoned devices; ``sticky``
+        stays the first sticky error's repr (or None) for backward
+        compatibility."""
         with self._lock:
+            first_sticky = (repr(next(iter(self._sticky.values())))
+                            if self._sticky else None)
             return {
                 "failures": self.failures,
                 "retries": self.retries,
@@ -1326,7 +1597,11 @@ class Dispatcher:
                 "errored_retained": len(self._errored),
                 "inflight": len(self._inflight),
                 "pending": len(self._pending),
-                "sticky": repr(self._sticky) if self._sticky else None,
+                "sticky": first_sticky,
+                "sticky_devices": {self._dev_label(k): repr(v)
+                                   for k, v in self._sticky.items()},
+                "devices": {k: dict(v)
+                            for k, v in self._dev_counters.items()},
                 "watchdog_strikes": (self.watchdog.strikes
                                      if self.watchdog else 0),
             }
@@ -1362,7 +1637,8 @@ def peek_at_last_error() -> Optional[BaseException]:
     return _DISPATCHER.peek_at_last_error()
 
 
-def device_reset() -> Dispatcher:
+def device_reset(device: Any = None) -> Dispatcher:
     """Clear sticky/poisoned error state on the default dispatcher —
-    the ``cudaDeviceReset`` analogue."""
-    return _DISPATCHER.device_reset()
+    the ``cudaDeviceReset`` analogue.  ``device=`` scopes the reset to
+    one device's sticky state (see :meth:`Dispatcher.device_reset`)."""
+    return _DISPATCHER.device_reset(device)

@@ -22,3 +22,17 @@ def make_host_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = max(1, min(model, n // max(data, 1)))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def device_pool(n: int | None = None, *, mesh=None):
+    """The device tuple a :class:`~repro.core.streams.Dispatcher`
+    places streams over: the first ``n`` host devices (all of them when
+    ``n`` is None), or — given a ``mesh`` — that mesh's devices in
+    flat order, so stream placement and sharded launches draw from the
+    same pool.  Run under ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=N`` to get N CPU devices."""
+    if mesh is not None:
+        devs = tuple(mesh.devices.flat)
+    else:
+        devs = tuple(jax.devices())
+    return devs if n is None else devs[:n]

@@ -85,7 +85,10 @@ class TokenPipeline:
         self.batch = batch
         self.nbins = nbins
         self.use_graph = graph
-        self.stream = cox.Stream(name="tok-pipeline")
+        # priority -1: the per-token stats pipeline is latency-sensitive
+        # (it gates the decode loop's step cadence) — the Kahn ready-set
+        # dispatches it before the bulk postprocess pool's launches
+        self.stream = cox.Stream(name="tok-pipeline", priority=-1)
         self.hist = np.zeros(nbins, np.int32)
         self.last: Dict[str, np.ndarray] = {}
         self._graph: Optional[cox.Graph] = None
@@ -144,11 +147,18 @@ class RequestKernelPool:
     :class:`~repro.core.errors.CoxError` surfaces at that handle's own
     sync, the failed request is retired, the slot's stream is reset
     (un-poisoned) so it stays usable, and the remaining slots complete
-    normally.  ``health`` carries the pool counters."""
+    normally.  ``health`` carries the pool counters.
+
+    On a multi-device pool the slot streams spread across devices:
+    each stream is a distinct placement unit, so the dispatcher's
+    round-robin policy deals slots over the healthy devices and
+    independent requests' kernels run truly concurrently (priority 1:
+    postprocessing is bulk work, dispatched after the latency-sensitive
+    token pipeline)."""
 
     def __init__(self, n_slots: int, nbins: int = 64):
         self.nbins = nbins
-        self.streams = [cox.Stream(name=f"req-slot{i}")
+        self.streams = [cox.Stream(name=f"req-slot{i}", priority=1)
                         for i in range(n_slots)]
         self.handles: List[cox.LaunchHandle] = []
         self._meta: List[tuple] = []      # (slot, n_tokens) per handle
@@ -381,6 +391,13 @@ def serve_requests(arch: str, *, batch: int, ctx: int, n_requests: int,
             roots = [e for e in h["errors"]
                      if not e.startswith("CoxDependencyError")]
             assert len(roots) == 1 and "injected" in roots[0], h
+            # ...and the per-device counters confirm the fault stayed
+            # confined to ONE device (slot 0's placement) — the other
+            # devices' failure counters are untouched
+            dev_fail = [d for d, c in
+                        out["dispatch_health"]["devices"].items()
+                        if c.get("failures", 0)]
+            assert len(dev_fail) == 1, out["dispatch_health"]
     if graph:
         g_stats, e_stats = (p.collect() for p in pipelines)
         for k in g_stats:               # replay ≡ eager, bitwise
@@ -426,6 +443,14 @@ def main():
         msg += (f" (graph replay: {out['graph']['steps']} steps, "
                 f"{out['graph']['hist_tokens']} tokens binned, "
                 f"bitwise == eager)")
+    # per-device placement health: one cell per device the dispatcher
+    # placed work on (multi-device pools spread the slot streams)
+    devs = out["dispatch_health"].get("devices", {})
+    if devs:
+        cells = ", ".join(
+            f"{name}: {c['dispatches']}d/{c['failures']}f/"
+            f"{c['degradations']}g" for name, c in sorted(devs.items()))
+        msg += f" [devices: {cells}]"
     print(msg)
 
 
