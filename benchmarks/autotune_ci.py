@@ -1,0 +1,166 @@
+"""CI driver for the autotune persistent-cache contract.
+
+The promise the on-disk winner cache makes is *cross-process*: a fleet
+tunes once, and every later boot resolves the same knobs from disk with
+zero measurement launches.  In-process tests can only fake the fresh
+boot (``autotune.reset(memory_only=True)``); this driver proves it for
+real by running three phases in three separate interpreters, glued
+together by the ``autotune`` CI job:
+
+  cold   — resolve every pick kernel with ``autotune=True`` against an
+           empty cache: the candidate grid is measured, winners land on
+           disk.  Asserts the cache file exists afterwards and records
+           picks / stats / wall time to ``cold.json``.
+  warm   — a brand-new process repeats the identical resolves.  Asserts
+           the measurement-launch counter stayed at ZERO (every pick
+           came off disk) and records to ``warm.json``.
+  check  — compares the two records: identical picks per kernel, warm
+           disk hits == kernel count, and warm resolve wall time below
+           the cold tuning wall time.
+
+Usage (the CI job sets COX_AUTOTUNE_CACHE to a workspace-local path):
+
+    python benchmarks/autotune_ci.py --phase cold  --out /tmp/at
+    python benchmarks/autotune_ci.py --phase warm  --out /tmp/at
+    python benchmarks/autotune_ci.py --phase check --out /tmp/at
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def fail(msg: str) -> None:
+    print(f"autotune_ci: FAIL — {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def resolve_picks() -> tuple:
+    """Resolve every pick kernel with autotune on; return
+    ({kernel: resolved-cell}, stats, wall_seconds).  Cold: measures and
+    persists.  Warm: must come entirely off the disk cache."""
+    from benchmarks.kernels_suite import all_kernels
+    from benchmarks.run import AUTOTUNE_PICKS
+    from repro.core import autotune as at
+
+    picks = {}
+    t0 = time.perf_counter()
+    for sk in all_kernels():
+        if sk.name not in AUTOTUNE_PICKS:
+            continue
+        req = sk.kernel.make_request(grid=sk.grid, block=sk.block,
+                                     args=sk.make_args(), autotune=True)
+        rl = req.rl
+        picks[sk.name] = {"backend": rl.backend, "warp_exec": rl.warp_exec,
+                          "chunk": rl.chunk, "chunk_source": rl.chunk_source}
+    wall = time.perf_counter() - t0
+    if sorted(picks) != sorted(AUTOTUNE_PICKS):
+        fail(f"pick kernels missing: resolved {sorted(picks)}, "
+             f"expected {sorted(AUTOTUNE_PICKS)}")
+    return picks, at.stats(), wall
+
+
+def phase_cold(out: str) -> None:
+    from repro.core import autotune as at
+    path = at.cache_path()
+    if path is None:
+        fail(f"{at.ENV_CACHE} is 'off' — the cold phase needs a cache file")
+    if os.path.exists(path):
+        fail(f"cache file {path} already exists — cold phase must start "
+             f"from an empty cache (the CI job uses a fresh workspace dir)")
+    picks, stats, wall = resolve_picks()
+    if stats["measurements"] <= 0:
+        fail(f"cold phase issued no measurement launches: {stats}")
+    if stats["misses"] != len(picks):
+        fail(f"cold phase expected {len(picks)} misses, got {stats}")
+    if not os.path.exists(path):
+        fail(f"cold phase never wrote the cache file {path}")
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("version") != at.AUTOTUNE_VERSION:
+        fail(f"cache file carries version {doc.get('version')!r}, "
+             f"expected {at.AUTOTUNE_VERSION}")
+    record(out, "cold", picks, stats, wall, path)
+
+
+def phase_warm(out: str) -> None:
+    from repro.core import autotune as at
+    path = at.cache_path()
+    if path is None or not os.path.exists(path):
+        fail(f"warm phase needs the cold phase's cache file ({path})")
+    picks, stats, wall = resolve_picks()
+    # the contract: a fresh process resolves every pick from disk with
+    # ZERO measurement launches
+    if stats["measurements"] != 0:
+        fail(f"warm phase issued {stats['measurements']} measurement "
+             f"launches (expected 0) — the disk cache was not honored")
+    # the first lookup seeds the whole in-memory cache from disk (one
+    # disk hit); later picks are memory hits — all that matters is that
+    # every pick resolved from cache and disk was actually involved
+    if stats["disk_hits"] < 1:
+        fail(f"warm phase never touched the disk cache: {stats}")
+    if stats["hits"] + stats["disk_hits"] != len(picks):
+        fail(f"warm phase expected {len(picks)} cache hits, got {stats}")
+    if stats["misses"] != 0:
+        fail(f"warm phase missed the cache {stats['misses']} times")
+    record(out, "warm", picks, stats, wall, path)
+
+
+def record(out: str, phase: str, picks: dict, stats: dict, wall: float,
+           cache: str) -> None:
+    os.makedirs(out, exist_ok=True)
+    doc = {"phase": phase, "picks": picks, "stats": stats,
+           "wall_s": round(wall, 3), "cache": cache}
+    dest = os.path.join(out, f"{phase}.json")
+    with open(dest, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"autotune_ci: {phase} OK — {len(picks)} picks, "
+          f"{stats['measurements']} measurement launches, "
+          f"wall {wall:.2f}s -> {dest}")
+
+
+def phase_check(out: str) -> None:
+    docs = {}
+    for phase in ("cold", "warm"):
+        p = os.path.join(out, f"{phase}.json")
+        try:
+            with open(p) as f:
+                docs[phase] = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            fail(f"cannot read {p}: {e}")
+    cold, warm = docs["cold"], docs["warm"]
+    if warm["picks"] != cold["picks"]:
+        diff = {k: (cold["picks"].get(k), warm["picks"].get(k))
+                for k in set(cold["picks"]) | set(warm["picks"])
+                if cold["picks"].get(k) != warm["picks"].get(k)}
+        fail(f"warm picks differ from cold picks: {diff}")
+    if warm["wall_s"] >= cold["wall_s"]:
+        fail(f"warm resolve ({warm['wall_s']}s) not faster than cold "
+             f"tuning ({cold['wall_s']}s) — the cache saves nothing")
+    speedup = cold["wall_s"] / max(warm["wall_s"], 1e-9)
+    print(f"autotune_ci: check OK — identical picks for "
+          f"{len(cold['picks'])} kernels; warm startup {warm['wall_s']}s "
+          f"vs cold {cold['wall_s']}s ({speedup:.1f}x faster, "
+          f"0 warm measurement launches)")
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--phase", required=True,
+                   choices=("cold", "warm", "check"))
+    p.add_argument("--out", required=True,
+                   help="directory for the per-phase record JSONs")
+    args = p.parse_args(argv)
+    {"cold": phase_cold, "warm": phase_warm,
+     "check": phase_check}[args.phase](args.out)
+
+
+if __name__ == "__main__":
+    main()

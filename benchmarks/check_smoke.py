@@ -33,11 +33,22 @@ by diffing the smoke output against the committed baseline
   cores — 4 streams over a 4-device pool sustain >= 1.6x the 1-device
   throughput (``PLACEMENT_MIN_SCALING``), the tentpole perf claim;
 * every committed-baseline sweep entry records the all-auto heuristics'
-  resolved cell (``auto_cell``), and that pick never lands on the
-  slowest measured cell when the cells are separated by more than
-  measurement noise (``AUTOTUNE_NOISE_X``).
+  resolved cell (``auto_cell``) *and chunk* (``auto_chunk`` +
+  ``chunk_source``), and the cell pick never lands on the slowest
+  measured cell when the cells are separated by more than measurement
+  noise (``AUTOTUNE_NOISE_X``);
+* the ``autotune`` section produced a cell per pick kernel in both runs
+  (tuned-vs-heuristic bitwise equality and the zero-measurement warm
+  cache hit asserted in-process), and on the committed baseline the
+  measured winner is never slower than the heuristic pick beyond noise,
+  the heuristic *chunk* is never the slowest measured chunk beyond
+  noise (the chunk extension of the mispick gate), and the recorded
+  cost-model estimates are sane — positive op/mem estimates whose
+  implied GFLOPS/GB/s stay inside generous physical bounds
+  (``ESTIMATE_MAX_GFLOPS``/``ESTIMATE_MAX_GBPS``) so cost-model rot
+  shows up here instead of silently mis-pruning candidates.
 
-Usage: ``python benchmarks/check_smoke.py BENCH_SMOKE.json BENCH_PR8.json``
+Usage: ``python benchmarks/check_smoke.py BENCH_SMOKE.json BENCH_PR9.json``
 """
 
 from __future__ import annotations
@@ -49,6 +60,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.run import (  # noqa: E402
+    AUTOTUNE_PICKS,
     GRAPH_DEPTHS,
     PLACEMENT_DEVICES,
     SWEEP_SMOKE_PICKS,
@@ -69,6 +81,20 @@ PLACEMENT_GATE_DEVICES = 4
 # mispick is unambiguous — e.g. vmap on a cooperative grid-sync kernel
 # (6.5x) or batched warps on a captured-atomics reduction (6.1x)
 AUTOTUNE_NOISE_X = 2.0
+AUTOTUNE_FIELDS = (
+    "heur_us",
+    "tuned_us",
+    "speedup_x",
+    "op_estimate",
+    "mem_estimate",
+    "gflops",
+)
+# estimate-accuracy bounds: recorded op/mem estimates against measured
+# wall time must imply a throughput a CPU host could conceivably reach —
+# generous by orders of magnitude, they catch a cost model that starts
+# counting garbage (units slip, double-counted loops), not slow kernels
+ESTIMATE_MAX_GFLOPS = 5000.0  # ~50x any host CPU
+ESTIMATE_MAX_GBPS = 2000.0  # ~5x any host memory system
 
 
 def fail(msg: str) -> None:
@@ -130,6 +156,7 @@ def main(argv: list[str]) -> None:
     check_graph(smoke, baseline, row_names)
     check_placement(smoke, baseline, row_names)
     check_autotune(baseline)
+    check_autotune_section(smoke, baseline, row_names)
     check_health(smoke)
 
     print(
@@ -140,7 +167,9 @@ def main(argv: list[str]) -> None:
         f"{max(GRAPH_DEPTHS)} speedup ≥ {GRAPH_MIN_SPEEDUP}x); "
         f"placement cells × {len(PLACEMENT_DEVICES)} pool sizes present "
         f"(≥ {PLACEMENT_MIN_SCALING}x at {PLACEMENT_GATE_DEVICES} devices "
-        f"when cpus ≥ {PLACEMENT_GATE_DEVICES}); autotune picks checked; "
+        f"when cpus ≥ {PLACEMENT_GATE_DEVICES}); autotune picks checked "
+        f"({len(AUTOTUNE_PICKS)} tuned kernels: never-slower ≤ "
+        f"{AUTOTUNE_NOISE_X}x, chunk picks + estimate bounds); "
         f"equality asserts ran in-process"
     )
 
@@ -267,7 +296,24 @@ def check_autotune(baseline: dict) -> None:
             fail(
                 f"{kernel}: baseline sweep entry carries no auto_cell — "
                 f"regenerate the baseline (python benchmarks/run.py "
-                f"--sections backend_sweep ... --json BENCH_PR8.json)"
+                f"--sections backend_sweep ... --json BENCH_PR9.json)"
+            )
+        chunk = entry.get("auto_chunk")
+        if not isinstance(chunk, int) or chunk < 1:
+            fail(
+                f"{kernel}: baseline sweep entry carries no auto_chunk "
+                f"({chunk!r}) — regenerate the baseline with the "
+                f"chunk-resolving sweep (BENCH_PR9.json)"
+            )
+        if entry.get("chunk_source") not in (
+            "heuristic",
+            "explicit",
+            "cooperative",
+            "autotuned",
+        ):
+            fail(
+                f"{kernel}: baseline sweep entry has invalid chunk_source "
+                f"{entry.get('chunk_source')!r}"
             )
         cells = {
             c: t for c, t in entry.get("times_us", {}).items() if c in REQUIRED_CELLS
@@ -285,6 +331,113 @@ def check_autotune(baseline: dict) -> None:
                 f"{worst / best:.2f}x over the best "
                 f"({min(cells, key=cells.get)!r} at {best}us); retune "
                 f"repro.core.flat or regenerate the baseline"
+            )
+
+
+def check_autotune_section(smoke: dict, baseline: dict, row_names: set) -> None:
+    """Gate the measured-tuning section itself.  Coverage + field sanity
+    on both runs; the perf and accuracy gates bind on the committed
+    full-run baseline only (smoke runs 1 timing iteration):
+
+    * never-slower — the tuned pick's wall time stays within
+      ``AUTOTUNE_NOISE_X`` of the heuristic pick's (the heuristic cell
+      is always a candidate, so a bigger loss means the tuner picked on
+      garbage measurements);
+    * chunk mispick — among the tuner's own candidate measurements that
+      share the heuristic backend/warp_exec, the heuristic *chunk* is
+      never the slowest cell beyond noise (the chunk analogue of the
+      ``auto_cell`` gate: it would mean ``DEFAULT_CHUNK`` needs
+      retuning).  The candidate cells are min-of-2 single launches —
+      jittery on a time-shared host — so the gate additionally requires
+      corroboration from the median-of-iters wall timings (the
+      heuristic pick actually losing to the tuned pick beyond noise)
+      before it fires;
+    * estimate accuracy — op/mem estimates are positive and, against the
+      measured wall time, imply throughputs inside generous physical
+      bounds; a violation means cost-model rot, and the tuner's
+      footprint pruning is built on those numbers."""
+    if "autotune" not in smoke.get("sections", []):
+        fail(f"smoke run missed the autotune section: {smoke.get('sections')}")
+    for tag, payload in (("smoke", smoke), ("baseline", baseline)):
+        by_kernel = {e.get("kernel"): e for e in payload.get("autotune", [])}
+        missing = [k for k in AUTOTUNE_PICKS if k not in by_kernel]
+        if missing:
+            fail(
+                f"{tag}: autotune cells missing kernels {missing} "
+                f"(present: {sorted(by_kernel)})"
+            )
+        for kernel in AUTOTUNE_PICKS:
+            entry = by_kernel[kernel]
+            for field in AUTOTUNE_FIELDS:
+                value = entry.get(field)
+                if not isinstance(value, (int, float)) or value <= 0:
+                    fail(
+                        f"{tag}: autotune {kernel}: field {field!r} "
+                        f"missing or non-positive ({value!r})"
+                    )
+            if not entry.get("heur_cell") or not entry.get("tuned_cell"):
+                fail(f"{tag}: autotune {kernel}: pick cells missing")
+    stats = smoke.get("autotune_stats", {})
+    if stats.get("measurements", 0) <= 0:
+        fail(
+            "smoke autotune section issued no measurement launches "
+            f"(autotune_stats: {stats!r}) — the cold pass never tuned"
+        )
+    for kernel in AUTOTUNE_PICKS:
+        if f"autotune.{kernel}" not in row_names:
+            fail(f"autotune.{kernel}: CSV row missing from smoke output")
+
+    base_cells = {e["kernel"]: e for e in baseline.get("autotune", [])}
+    for kernel in AUTOTUNE_PICKS:
+        entry = base_cells[kernel]
+        # never-slower (baseline timings only: medians over full iters)
+        if entry["tuned_us"] > AUTOTUNE_NOISE_X * entry["heur_us"]:
+            fail(
+                f"baseline autotune {kernel}: tuned pick "
+                f"{entry['tuned_cell']!r} at {entry['tuned_us']}us is "
+                f"{entry['tuned_us'] / entry['heur_us']:.2f}x slower than "
+                f"the heuristic pick {entry['heur_cell']!r} at "
+                f"{entry['heur_us']}us (> {AUTOTUNE_NOISE_X}x noise) — "
+                f"the tuner picked on garbage measurements"
+            )
+        # chunk mispick: the heuristic chunk vs the tuner's own chunk
+        # column (cells sharing the heuristic backend/warp_exec)
+        cand = entry.get("candidate_times_us", {})
+        heur = entry.get("heur_cell", "")  # e.g. vmap_serial_c8
+        prefix = "/".join(heur.split("_")[:2])  # -> vmap/serial
+        col = {c: t for c, t in cand.items() if c.startswith(prefix + "/")}
+        heur_label = prefix + "/" + heur.split("_")[-1]  # vmap/serial/c8
+        # the tuner's cells are min-of-2 launches (jittery); only fail
+        # when the stable median timings corroborate the mispick
+        corroborated = entry["heur_us"] > AUTOTUNE_NOISE_X * entry["tuned_us"]
+        if len(col) > 1 and heur_label in col and corroborated:
+            best, worst = min(col.values()), max(col.values())
+            if col[heur_label] >= worst and worst > AUTOTUNE_NOISE_X * best:
+                fail(
+                    f"baseline autotune {kernel}: heuristic chunk cell "
+                    f"{heur_label!r} ({col[heur_label]:.0f}us) is the "
+                    f"slowest measured chunk, {worst / best:.2f}x over "
+                    f"the best, and the median timings confirm "
+                    f"({entry['heur_us']}us vs {entry['tuned_us']}us) — "
+                    f"retune DEFAULT_CHUNK in repro.core.backends.plan "
+                    f"or regenerate the baseline"
+                )
+        # estimate accuracy: implied throughput at the measured time
+        gflops = entry["op_estimate"] / entry["tuned_us"] / 1e3
+        gbps = entry["mem_estimate"] / entry["tuned_us"] / 1e3
+        if gflops > ESTIMATE_MAX_GFLOPS:
+            fail(
+                f"baseline autotune {kernel}: op_estimate "
+                f"{entry['op_estimate']:.3g} implies {gflops:.0f} GFLOPS "
+                f"at {entry['tuned_us']}us (> {ESTIMATE_MAX_GFLOPS}) — "
+                f"cost-model op counting is off"
+            )
+        if gbps > ESTIMATE_MAX_GBPS:
+            fail(
+                f"baseline autotune {kernel}: mem_estimate "
+                f"{entry['mem_estimate']:.3g} implies {gbps:.0f} GB/s "
+                f"at {entry['tuned_us']}us (> {ESTIMATE_MAX_GBPS}) — "
+                f"cost-model byte counting is off"
             )
 
 

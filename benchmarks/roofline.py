@@ -27,8 +27,54 @@ PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
 HBM_BW = 819e9           # bytes/s / chip
 LINK_BW = 50e9           # bytes/s / link (ICI)
 
+# host-CPU roofline for the live-telemetry path (repro.core.streams
+# Dispatcher.telemetry()): a conservative per-core AVX2 FMA peak and
+# one DDR channel's worth of bandwidth, scaled by visible cores —
+# override per machine via from_telemetry(peak_flops=..., mem_bw=...)
+CPU_CORE_FLOPS = 32e9    # FLOP/s/core (8-lane f32 FMA @ ~2 GHz)
+CPU_CORE_BW = 12e9       # bytes/s/core (shared-bus share)
+
 _COLL_KEYS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
               "collective-permute")
+
+
+def cpu_peaks() -> Dict[str, float]:
+    cores = os.cpu_count() or 1
+    return {"peak_flops": CPU_CORE_FLOPS * cores,
+            "mem_bw": CPU_CORE_BW * cores}
+
+
+def from_telemetry(rows, peak_flops: float = None,
+                   mem_bw: float = None) -> list:
+    """Roofline rows from the dispatcher's *live* counters
+    (``cox.get_dispatcher().telemetry()``) instead of dry-run JSON:
+    each stage-key row's op/mem estimates against the host peaks give
+    t_compute/t_memory, the dominant term, and — where the row carries
+    measured wall time — the achieved fraction of the dominant roof.
+    The returned dicts keep the telemetry fields (kernel, backend,
+    warp_exec, chunk, launches, gflops) so the bench JSON can embed
+    them verbatim."""
+    peaks = cpu_peaks()
+    pf = peak_flops if peak_flops is not None else peaks["peak_flops"]
+    bw = mem_bw if mem_bw is not None else peaks["mem_bw"]
+    out = []
+    for rec in rows:
+        t_comp = rec.get("op_estimate", 0.0) / pf
+        t_mem = rec.get("mem_estimate", 0.0) / bw
+        dominant = "compute" if t_comp >= t_mem else "memory"
+        bound = max(t_comp, t_mem)
+        row = dict(rec)
+        row.update(t_compute=t_comp, t_memory=t_mem, dominant=dominant,
+                   roofline_fraction=(t_comp / bound if bound else 0.0))
+        per = rec.get("s_per_launch", 0.0)
+        if rec.get("time_basis") == "measured" and per > 0 and bound > 0:
+            # achieved share of the dominant roof: 1.0 = running at the
+            # machine balance point, ≪1 = far off the roof (overhead,
+            # serialization, or a pessimistic estimate — the
+            # check_smoke accuracy gate bounds how far)
+            row["roof_attained"] = bound / per
+        out.append(row)
+    return out
 
 
 def model_flops(rec: Dict[str, Any]) -> float:

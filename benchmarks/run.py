@@ -24,6 +24,12 @@ flagship kernels only).
                   over 1/2/4/8-device pools (subprocess, 8 forced host
                   devices), bitwise equality vs the 1-device pool
                   asserted + throughput ratio per pool size
+  autotune      — measured knob tuning vs the hand heuristics: each pick
+                  kernel launched with the heuristic knobs, then with
+                  autotune=True (cold: candidate cells measured into a
+                  fresh cache; warm: zero-measurement cache hit
+                  asserted), bitwise equality + never-slower recorded
+                  per cell with op/mem estimates and achieved GFLOPS
   scalability   — Fig. 14: blocks across host devices (subprocess, 8 dev)
   roofline      — §Roofline terms from results/dryrun_all.json (if present)
 """
@@ -55,6 +61,7 @@ SWEEP_RESULTS = []   # structured backend_sweep matrix
 STREAM_RESULTS = []  # structured streams-overlap cells
 GRAPH_RESULTS = []   # structured graph-replay cells
 PLACEMENT_RESULTS = []  # structured multi-device placement cells
+AUTOTUNE_RESULTS = []   # structured heuristic-vs-tuned cells
 
 # device-pool sizes every placement run must cover — module-level so the
 # CI regression gate (benchmarks/check_smoke.py) can assert coverage
@@ -72,6 +79,12 @@ SWEEP_FULL_PICKS = ("vectorAdd", "MatrixMulCUDA", "matrixMul1D",
                     "transpose", "stencil2d", "reduce0", "reduce4",
                     "histogram64", "blockCounter", "saxpyHeavy",
                     "warpPrefixStats", "gridReduce")
+
+# autotune kernel picks — module-level so the CI regression gate can
+# assert the committed baseline covered them (a mix of chunk-sensitive
+# vmap kernels and warp-batched candidates)
+AUTOTUNE_PICKS = ("MatrixMulCUDA", "transpose", "warpPrefixStats",
+                  "saxpyHeavy")
 
 
 def _time_call(fn, *args, warmup=None, iters=None):
@@ -277,6 +290,7 @@ def backend_sweep():
         rl_auto = sk.kernel.make_request(grid=sk.grid, block=sk.block,
                                          args=args).rl
         auto_cell = f"{rl_auto.backend}_{rl_auto.warp_exec}"
+        auto_chunk = rl_auto.chunk
 
         base = run("scan")
         times = {}
@@ -306,6 +320,8 @@ def backend_sweep():
             "kernel": sk.name, "grid": sk.grid, "block": sk.block,
             "n_warps": n_warps, "features": sk.features or "none",
             "auto_cell": auto_cell,
+            "auto_chunk": auto_chunk,
+            "chunk_source": rl_auto.chunk_source,
             "times_us": {c: round(t, 1) for c, t in times.items()},
             "warp_batch_speedup_scan": round(wb, 2),
             "warp_batch_speedup_vmap": round(
@@ -545,6 +561,99 @@ def placement():
 # ---------------------------------------------------------------------------
 
 
+def autotune():
+    """Measured knob tuning (repro.core.autotune) vs the hand
+    heuristics.  Per pick kernel: launch with the heuristic knobs, then
+    with ``autotune=True`` against a fresh cache (cold pass — the
+    candidate grid is measured and the winner persisted), assert the
+    tuned outputs bitwise-equal the heuristic ones, then time both
+    picks.  A warm re-resolve in the same process must hit the cache
+    with zero new measurement launches — counter-asserted here, and
+    again across processes by the CI autotune job.  Each cell records
+    the cost model's op/mem estimates and the achieved GFLOPS so
+    check_smoke.py can gate estimate accuracy and never-slower."""
+    import tempfile
+    from benchmarks.kernels_suite import all_kernels
+    from repro.core import autotune as at
+    from repro.core import costmodel
+
+    tmp = tempfile.mkdtemp(prefix="cox-autotune-bench-")
+    cache_file = os.path.join(tmp, "autotune.json")
+    prev = os.environ.get(at.ENV_CACHE)
+    os.environ[at.ENV_CACHE] = cache_file
+    at.reset()
+    try:
+        for sk in all_kernels():
+            if sk.name not in AUTOTUNE_PICKS:
+                continue
+            args = sk.make_args()
+
+            def run(tune):
+                return sk.kernel.launch(grid=sk.grid, block=sk.block,
+                                        args=args, autotune=tune)
+
+            req = sk.kernel.make_request(grid=sk.grid, block=sk.block,
+                                         args=args)
+            heur_rl = req.rl
+            heur_cell = (f"{heur_rl.backend}_{heur_rl.warp_exec}"
+                         f"_c{heur_rl.chunk}")
+            base = run(False)
+            tuned_out = run(True)       # cold: measures candidate cells
+            for k in base:
+                np.testing.assert_array_equal(
+                    np.asarray(tuned_out[k]), np.asarray(base[k]),
+                    err_msg=f"{sk.name}.{k}: tuned != heuristic")
+            m_cold = at.stats()["measurements"]
+            req_t = sk.kernel.make_request(grid=sk.grid, block=sk.block,
+                                           args=args, autotune=True)
+            assert at.stats()["measurements"] == m_cold, \
+                f"{sk.name}: warm re-resolve issued measurement launches"
+            tuned_rl = req_t.rl
+            tuned_cell = (f"{tuned_rl.backend}_{tuned_rl.warp_exec}"
+                          f"_c{tuned_rl.chunk}")
+            heur_us = _time_call(lambda: run(False))
+            tuned_us = _time_call(lambda: run(True))
+            rec = next((r for k, r in at.entries().items()
+                        if k.startswith(sk.name + "|")), {})
+            est = costmodel.estimate(req.ck, tuned_rl, req.shapes,
+                                     mode="xla")
+            gflops = est.op_estimate / tuned_us / 1e3  # us -> GFLOPS
+            ratio = heur_us / tuned_us
+            _row(f"autotune.{sk.name}", tuned_us,
+                 f"heur_us={heur_us:.1f};heur={heur_cell};"
+                 f"tuned={tuned_cell};speedup={ratio:.2f}x;"
+                 f"gflops={gflops:.3f}")
+            AUTOTUNE_RESULTS.append({
+                "kernel": sk.name, "grid": sk.grid, "block": sk.block,
+                "heur_cell": heur_cell, "tuned_cell": tuned_cell,
+                "heur_us": round(heur_us, 1),
+                "tuned_us": round(tuned_us, 1),
+                "speedup_x": round(ratio, 2),
+                "op_estimate": est.op_estimate,
+                "mem_estimate": est.mem_estimate,
+                "estimate_source": est.source,
+                "gflops": round(gflops, 4),
+                "chunk_source": tuned_rl.chunk_source,
+                # the tuner's own per-candidate measurements (µs) — the
+                # chunk-mispick gate reads these cells
+                "candidate_times_us": rec.get("times_us", {}),
+            })
+        st = at.stats()
+        _row("autotune.STATS", 0.0,
+             f"misses={st['misses']};hits={st['hits']};"
+             f"measurements={st['measurements']};"
+             f"disk_writes={st['disk_writes']}")
+        assert os.path.exists(cache_file), "autotune cache never written"
+    finally:
+        if prev is None:
+            os.environ.pop(at.ENV_CACHE, None)
+        else:
+            os.environ[at.ENV_CACHE] = prev
+
+
+# ---------------------------------------------------------------------------
+
+
 def scalability():
     """Fig. 14: multi-block kernels across host devices (8-dev subprocess
     — device count must be set before jax initializes)."""
@@ -593,6 +702,7 @@ SECTIONS = {
     "streams": streams,
     "graph_replay": graph_replay,
     "placement": placement,
+    "autotune": autotune,
     "scalability": scalability,
     "roofline": roofline,
 }
@@ -601,10 +711,10 @@ SECTIONS = {
 def main(argv=None) -> None:
     global WARMUP, ITERS, SMOKE
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--json", nargs="?", const="BENCH_PR8.json", default=None,
+    p.add_argument("--json", nargs="?", const="BENCH_PR9.json", default=None,
                    metavar="PATH",
                    help="write machine-readable results (default path "
-                        "BENCH_PR8.json when the flag is given bare)")
+                        "BENCH_PR9.json when the flag is given bare)")
     p.add_argument("--sections", default=None,
                    help=f"comma-separated subset of {sorted(SECTIONS)}")
     p.add_argument("--smoke", action="store_true",
@@ -621,8 +731,10 @@ def main(argv=None) -> None:
     for name in names:
         SECTIONS[name]()
     if args.json:
+        from benchmarks import roofline as _roofline
+        from repro.core import autotune as _at
         payload = {
-            "schema": "cox-bench-v3",
+            "schema": "cox-bench-v4",
             "smoke": SMOKE,
             "iters": ITERS,
             "sections": names,
@@ -631,6 +743,13 @@ def main(argv=None) -> None:
             "streams": STREAM_RESULTS,
             "graph_replay": GRAPH_RESULTS,
             "placement": PLACEMENT_RESULTS,
+            "autotune": AUTOTUNE_RESULTS,
+            "autotune_stats": _at.stats(),
+            # live per-stage-key counters from the dispatcher, placed on
+            # the host roofline (estimates vs CPU peaks); rows carrying
+            # measured wall time also report the attained roof fraction
+            "telemetry": _roofline.from_telemetry(
+                cox.get_dispatcher().telemetry()),
             # fault-tolerance counters for the whole run: a clean bench
             # must never have taken a degradation-ladder rung (a rung
             # means the timed configuration is not the resolved one)

@@ -16,6 +16,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, Optional, Sequence
 
+from . import autotune  # noqa: F401  (cox.autotune — measured knob tuning)
+from . import autotune as _autotune  # distinct alias: make_request's
+#                                      autotune= knob shadows the module
+from . import costmodel  # noqa: F401  (cox.costmodel — op/mem estimates)
 from . import errors  # noqa: F401  (cox.errors — typed error hierarchy)
 from . import faults  # noqa: F401  (cox.faults — fault injection)
 from . import flat as _flat
@@ -109,15 +113,25 @@ class KernelFn:
                      collapse: str = "hybrid", mode: str = "auto",
                      simd: bool = True, warp_size: int = WARP_SIZE,
                      mesh=None, axis: str = "data", backend: str = "auto",
-                     chunk: Optional[int] = None, warp_exec: str = "auto",
-                     donate: bool = False,
-                     device: Any = None) -> _streams.LaunchRequest:
+                     chunk=None, warp_exec: str = "auto",
+                     donate: bool = False, device: Any = None,
+                     autotune: Optional[bool] = None
+                     ) -> _streams.LaunchRequest:
         """Resolve the launch knobs and bind the arguments into a
         :class:`~repro.core.streams.LaunchRequest` — the unit the stream
         dispatcher consumes.  Compilation (the pass pipeline) and knob
         resolution happen here, eagerly, so bad launches fail at the
         call site; staging and dispatch happen later, behind the
         dispatcher.
+
+        ``chunk=`` accepts an int (explicit, never overridden by the
+        autotuner), ``None`` (the heuristic default) or ``'auto'``
+        (tune the chunk by measurement).  ``autotune=True`` measures
+        every knob left on auto — candidate cells pruned by the cost
+        model, winners persisted in the on-disk cache
+        (``repro.core.autotune``) — and ``autotune=None`` defers to the
+        ``COX_AUTOTUNE`` env (plus ``chunk='auto'``, which always
+        tunes).
 
         ``device=`` pins the launch to one XLA device (multi-device
         placement; mutually exclusive with ``mesh``, which spans its
@@ -135,13 +149,20 @@ class KernelFn:
         ck = self._compiled_for(token)
         rl = _runtime.resolve_launch(ck, grid=grid, block=block3, mode=mode,
                                      backend=backend, warp_exec=warp_exec,
-                                     mesh=mesh)
+                                     chunk=chunk, mesh=mesh)
+        globals_, shapes, scalars = bind_kernel_args(ck, args)
+        tune = (autotune if autotune is not None
+                else (chunk == "auto" or _autotune.enabled()))
+        if tune:
+            rl = _autotune.tune(ck, token, rl, shapes=shapes,
+                                scalars=scalars, globals_=globals_,
+                                simd=simd, mesh=mesh, req_backend=backend,
+                                req_warp_exec=warp_exec)
         if donate:
             # fail at the call site, not at deferred staging
             check_donate_supported(rl.backend, ck.kernel.name)
-        globals_, shapes, scalars = bind_kernel_args(ck, args)
         return _streams.LaunchRequest(
-            ck=ck, token=token, rl=rl, simd=simd, chunk=chunk, mesh=mesh,
+            ck=ck, token=token, rl=rl, simd=simd, chunk=rl.chunk, mesh=mesh,
             axis=axis, donate=donate, globals_=globals_, shapes=shapes,
             scalars=scalars, device=device,
             # pre-resolution knobs: the degradation ladder may only fall
@@ -152,9 +173,8 @@ class KernelFn:
                collapse: str = "hybrid", mode: str = "auto",
                simd: bool = True, warp_size: int = WARP_SIZE,
                mesh=None, axis: str = "data", backend: str = "auto",
-               chunk: Optional[int] = None,
-               warp_exec: str = "auto", donate: bool = False,
-               device: Any = None,
+               chunk=None, warp_exec: str = "auto", donate: bool = False,
+               device: Any = None, autotune: Optional[bool] = None,
                stream: Optional[Stream] = None) -> Dict[str, Any]:
         """Launch with backend dispatch (see ``repro.core.backends``):
         enqueue on the (default) stream and dispatch — the async CUDA
@@ -188,7 +208,8 @@ class KernelFn:
             grid=grid, block=block, args=args, collapse=collapse,
             mode=mode, simd=simd, warp_size=warp_size, mesh=mesh,
             axis=axis, backend=backend, chunk=chunk, warp_exec=warp_exec,
-            donate=donate, device=device, stream=stream).arrays()
+            donate=donate, device=device, autotune=autotune,
+            stream=stream).arrays()
 
     def launch_async(self, *, stream: Optional[Stream] = None,
                      **knobs) -> LaunchHandle:

@@ -30,7 +30,7 @@ from jax.sharding import Mesh
 
 from . import backends as _backends
 from . import flat as _flat
-from .backends.plan import LaunchPlan
+from .backends.plan import DEFAULT_CHUNK, LaunchPlan
 from .execute import CompiledKernel
 from .types import (COOP_MAX_RESIDENT_BLOCKS, CoxUnsupported, Dim3, as_dim3,
                     check_launch_geometry)
@@ -42,18 +42,55 @@ class ResolvedLaunch:
     the single canonical form every caller (``KernelFn.launch``'s cache
     key, :func:`build_launcher`, tests) derives from.  The heuristics
     key on the normalized *totals*, so ``grid=4`` and ``grid=(4,1,1)``
-    resolve identically."""
+    resolve identically.
+
+    ``chunk``/``chunk_source`` carry the resolved vmap-wave width and
+    *where it came from*: ``'explicit'`` (caller passed ``chunk=``, the
+    autotuner must never override it), ``'heuristic'`` (defaulted to
+    ``min(grid, DEFAULT_CHUNK)``, fair game for measurement),
+    ``'cooperative'`` (pinned to ``grid`` by the all-resident grid-sync
+    rule), or ``'autotuned'`` (a measured winner).  Before this field
+    existed an explicit ``chunk=`` and the default were
+    indistinguishable downstream — the autotuner could have silently
+    overridden a user knob."""
     grid: Dim3
     block: Dim3
     backend: str    # 'scan' | 'vmap' | 'sharded'
     mode: str       # 'normal' | 'jit'
     warp_exec: str  # 'serial' | 'batched'
     n_warps: int
+    chunk: Optional[int] = None  # resolved blocks-per-wave (None: plan default)
+    chunk_source: str = "heuristic"  # 'explicit'|'heuristic'|'cooperative'|'autotuned'
+
+
+def resolve_chunk(ck: CompiledKernel, grid: int, chunk) -> tuple:
+    """Resolve the ``chunk`` knob to ``(value, source)`` — the one place
+    the explicit-vs-defaulted distinction is decided.  ``chunk`` accepts
+    an int (explicit — clamped to the grid but otherwise honored
+    verbatim, and never overridden by autotune), ``None``/'auto' (the
+    ``min(grid, DEFAULT_CHUNK)`` heuristic, tunable), with cooperative
+    launches pinning ``chunk == grid`` exactly as ``LaunchPlan.build``
+    enforces."""
+    auto = chunk is None or chunk == "auto"
+    if ck.n_phases > 1:
+        if not auto and int(chunk) < grid:
+            raise CoxUnsupported(
+                f"cooperative launch of '{ck.kernel.name}': chunk={chunk} "
+                f"would split the grid into waves, but a grid barrier "
+                f"needs every block resident per phase — drop chunk= "
+                f"(the plan schedules all {grid} blocks as one wave)")
+        return grid, "cooperative"
+    if auto:
+        return min(grid, DEFAULT_CHUNK), "heuristic"
+    c = int(chunk)
+    if c < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk!r}")
+    return min(c, grid), "explicit"
 
 
 def resolve_launch(ck: CompiledKernel, *, grid, block,
                    mode: str = "auto", backend: str = "auto",
-                   warp_exec: str = "auto",
+                   warp_exec: str = "auto", chunk=None,
                    mesh: Optional[Mesh] = None) -> ResolvedLaunch:
     """Normalize ``grid``/``block`` (``int | (x, y[, z])``) to canonical
     dim3, enforce CUDA's launch limits, and resolve the 'auto' knobs via
@@ -82,7 +119,9 @@ def resolve_launch(ck: CompiledKernel, *, grid, block,
     warp_exec = _flat.choose_warp_exec(ck.kernel, n_warps=n_warps,
                                        requested=warp_exec,
                                        machine=machines)
-    return ResolvedLaunch(grid3, block3, bname, mode, warp_exec, n_warps)
+    ch, ch_src = resolve_chunk(ck, grid3.total, chunk)
+    return ResolvedLaunch(grid3, block3, bname, mode, warp_exec, n_warps,
+                          ch, ch_src)
 
 
 def build_traceable(ck: CompiledKernel, rl: ResolvedLaunch, *,
@@ -92,9 +131,14 @@ def build_traceable(ck: CompiledKernel, rl: ResolvedLaunch, *,
     already-resolved launch.  Returns ``(plan, fn)`` with
     ``fn(globals_, scalars) -> {name: flat array}`` traceable inside a
     larger jitted program — the form ``repro.core.graphs`` inlines when
-    staging a captured launch DAG as one fused executable."""
+    staging a captured launch DAG as one fused executable.
+
+    ``chunk=`` overrides the resolved ``rl.chunk`` when given (legacy
+    call shape; the resolved field is the canonical source)."""
     plan = LaunchPlan.build(ck, grid=rl.grid, block=rl.block, mode=rl.mode,
-                            simd=simd, chunk=chunk, warp_exec=rl.warp_exec)
+                            simd=simd,
+                            chunk=chunk if chunk is not None else rl.chunk,
+                            warp_exec=rl.warp_exec)
     fn = _backends.get_backend(rl.backend).build_fn(plan, mesh=mesh,
                                                     axis=axis)
     return plan, fn
@@ -115,7 +159,9 @@ def build_resolved(ck: CompiledKernel, rl: ResolvedLaunch, *,
     caller must treat the passed arrays as *consumed* — JAX deletes
     donated buffers, and re-using one raises."""
     plan = LaunchPlan.build(ck, grid=rl.grid, block=rl.block, mode=rl.mode,
-                            simd=simd, chunk=chunk, warp_exec=rl.warp_exec)
+                            simd=simd,
+                            chunk=chunk if chunk is not None else rl.chunk,
+                            warp_exec=rl.warp_exec)
     exe = _backends.get_backend(rl.backend).build(plan, mesh=mesh, axis=axis,
                                                   donate=donate)
     return plan, exe
@@ -128,9 +174,10 @@ def build_launcher(ck: CompiledKernel, *, grid, block,
                    warp_exec: str = "auto", donate: bool = False):
     """:func:`resolve_launch` + :func:`build_resolved` in one call."""
     rl = resolve_launch(ck, grid=grid, block=block, mode=mode,
-                        backend=backend, warp_exec=warp_exec, mesh=mesh)
+                        backend=backend, warp_exec=warp_exec, chunk=chunk,
+                        mesh=mesh)
     return build_resolved(ck, rl, simd=simd, mesh=mesh, axis=axis,
-                          chunk=chunk, donate=donate)
+                          donate=donate)
 
 
 def launch(ck: CompiledKernel, *, grid, block, args: Sequence[Any],

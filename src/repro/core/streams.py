@@ -92,6 +92,7 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 
+from . import costmodel as _costmodel
 from . import errors as _errors
 from . import faults as _faults
 from . import placement as _placement
@@ -128,6 +129,10 @@ RETRY_BACKOFF_S = 0.005
 # deadline-wait poll period: the watchdog timer marks the deadline; the
 # waiter polls readiness at this granularity (host-side, no device cost)
 DEADLINE_POLL_S = 0.001
+
+# per-stage-key telemetry retention (launch counts, dispatch time, cost
+# estimates) — bounded like every other long-lived dispatcher structure
+TELEMETRY_MAX = 512
 
 
 def _is_deleted(x) -> bool:
@@ -692,6 +697,13 @@ class Dispatcher:
         self.stage_misses = 0
         self.stage_fn_hits = 0
         self.stage_fn_misses = 0
+        # ---- telemetry (README "Autotune & telemetry") ----
+        # per-stage-key live counters: launches, host dispatch seconds,
+        # estimated bytes/FLOPs (repro.core.costmodel), plus measured
+        # wall seconds when a caller notes them (note_measurement) —
+        # benchmarks/roofline.py computes roofline position from these
+        # real counters instead of dry-run JSON
+        self._telemetry: "OrderedDict[tuple, Dict[str, Any]]" = OrderedDict()
         self._capturing: "weakref.WeakSet[Stream]" = weakref.WeakSet()
         # ---- fault tolerance (README "Error model & fault tolerance") ----
         # errored requests whose handle was dropped without a sync move
@@ -1216,10 +1228,13 @@ class Dispatcher:
                 raise _errors.classify(e, site="dispatch",
                                        what=f"kernel '{name}'")
         try:
+            t0 = time.perf_counter()
             outputs = exe(req.globals_, req.scalars)   # async dispatch
+            dispatch_s = time.perf_counter() - t0
         except Exception as e:
             raise _errors.classify(e, site="dispatch",
                                    what=f"kernel '{name}'")
+        self._note_telemetry(req, dispatch_s)
         if _faults.consume("timeout", name) is not None:
             req.injected_hang = True      # outputs never report ready
         return outputs
@@ -1578,6 +1593,91 @@ class Dispatcher:
                 return str(d)
         return f"device:{did}"
 
+    # ---------------- telemetry (per-stage-key live counters) --------------
+
+    @staticmethod
+    def _telemetry_key(req: LaunchRequest) -> tuple:
+        """Human-readable stage identity: one row per distinct
+        (kernel, backend, warp_exec, chunk, geometry, device)."""
+        rl = req.rl
+        return (req.ck.kernel.name, rl.backend, rl.warp_exec,
+                rl.chunk, rl.grid.astuple(), rl.block.astuple(),
+                _dev_id(req.device))
+
+    def _note_telemetry(self, req: LaunchRequest, dispatch_s: float) -> None:
+        """Record one dispatched launch against its stage-key row.  The
+        cost estimate comes from ``repro.core.costmodel`` (cached per
+        launch shape; 'static' by default — ``COX_COSTMODEL=xla``
+        upgrades to the compiled program's own cost analysis).  Never
+        raises: telemetry must not be able to fail a launch."""
+        try:
+            est = _costmodel.estimate_request(req)
+        except Exception:       # pragma: no cover - estimate never raises
+            est = None
+        key = self._telemetry_key(req)
+        with self._lock:
+            rec = self._telemetry.get(key)
+            if rec is None:
+                rec = self._telemetry[key] = {
+                    "launches": 0, "dispatch_s": 0.0, "bytes": 0.0,
+                    "flops": 0.0, "op_estimate": 0.0, "mem_estimate": 0.0,
+                    "estimate_source": None, "chunk_source":
+                        getattr(req.rl, "chunk_source", "heuristic"),
+                    "measured_s": 0.0, "measured_launches": 0,
+                }
+                while len(self._telemetry) > TELEMETRY_MAX:
+                    self._telemetry.popitem(last=False)
+            else:
+                self._telemetry.move_to_end(key)
+            rec["launches"] += 1
+            rec["dispatch_s"] += dispatch_s
+            if est is not None:
+                rec["op_estimate"] = est.op_estimate
+                rec["mem_estimate"] = est.mem_estimate
+                rec["estimate_source"] = est.source
+                rec["bytes"] += est.mem_estimate
+                rec["flops"] += est.op_estimate
+
+    def note_measurement(self, req: LaunchRequest, seconds: float,
+                         launches: int = 1) -> None:
+        """Attach measured wall time to a request's stage-key row — the
+        benchmark harness and autotuner call this after timing a
+        synchronized launch, turning the row's estimates into achieved
+        GFLOPS/bandwidth."""
+        key = self._telemetry_key(req)
+        with self._lock:
+            rec = self._telemetry.get(key)
+            if rec is None:
+                return
+            rec["measured_s"] += float(seconds)
+            rec["measured_launches"] += int(launches)
+
+    def telemetry(self) -> List[Dict[str, Any]]:
+        """The per-stage-key counter rows, with achieved GFLOPS and
+        GB/s derived where measured wall time is available (falling
+        back to host dispatch time — a lower bound — otherwise)."""
+        with self._lock:
+            rows = [(k, dict(v)) for k, v in self._telemetry.items()]
+        out: List[Dict[str, Any]] = []
+        for (name, backend, warp_exec, chunk, grid, block, dev), rec in rows:
+            rec.update(kernel=name, backend=backend, warp_exec=warp_exec,
+                       chunk=chunk, grid=grid, block=block, device=dev)
+            n = max(1, rec["launches"])
+            if rec["measured_launches"] > 0 and rec["measured_s"] > 0:
+                per = rec["measured_s"] / rec["measured_launches"]
+                rec["time_basis"] = "measured"
+            elif rec["dispatch_s"] > 0:
+                per = rec["dispatch_s"] / n
+                rec["time_basis"] = "dispatch"
+            else:
+                per = 0.0
+                rec["time_basis"] = "none"
+            rec["s_per_launch"] = per
+            rec["gflops"] = (rec["op_estimate"] / per / 1e9) if per else 0.0
+            rec["gbps"] = (rec["mem_estimate"] / per / 1e9) if per else 0.0
+            out.append(rec)
+        return out
+
     def health(self) -> Dict[str, Any]:
         """Counters for monitoring a long-lived dispatcher — the serving
         layer and the benchmark gate read these.  ``devices`` carries
@@ -1585,7 +1685,10 @@ class Dispatcher:
         chaos drill asserts a fault stays confined to one device);
         ``sticky_devices`` the currently-poisoned devices; ``sticky``
         stays the first sticky error's repr (or None) for backward
-        compatibility."""
+        compatibility.  ``telemetry_keys``/``dispatch_s``/``bytes``
+        summarize the live per-stage-key counters (full rows via
+        :meth:`telemetry`); ``autotune`` carries the knob-tuner's
+        hit/miss/measurement counters."""
         with self._lock:
             first_sticky = (repr(next(iter(self._sticky.values())))
                             if self._sticky else None)
@@ -1604,7 +1707,22 @@ class Dispatcher:
                             for k, v in self._dev_counters.items()},
                 "watchdog_strikes": (self.watchdog.strikes
                                      if self.watchdog else 0),
+                "telemetry_keys": len(self._telemetry),
+                "dispatch_s": sum(r["dispatch_s"]
+                                  for r in self._telemetry.values()),
+                "bytes": sum(r["bytes"] for r in self._telemetry.values()),
+                "autotune": _autotune_stats(),
             }
+
+
+def _autotune_stats() -> Dict[str, int]:
+    """The knob-tuner's counters (lazy import: autotune pulls in the
+    cost model, which health probes must not pay for eagerly)."""
+    try:
+        from . import autotune as _autotune
+        return _autotune.stats()
+    except Exception:           # pragma: no cover - import always works
+        return {}
 
 
 # ---------------------------------------------------------------------------
