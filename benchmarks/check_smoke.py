@@ -37,6 +37,14 @@ by diffing the smoke output against the committed baseline
   ``chunk_source``), and the cell pick never lands on the slowest
   measured cell when the cells are separated by more than measurement
   noise (``AUTOTUNE_NOISE_X``);
+* the ``grid_stride`` section produced its oversubscribed cells (smoke
+  grids in the smoke run, every gate grid in the committed baseline)
+  with the cost model routing to ``grid_stride`` on its own
+  (``schedule_source == 'heuristic'``), stride-vs-chunked bitwise
+  equality asserted in-process, and on the committed baseline the
+  stride schedule never loses to the clamped-chunk fallback beyond
+  noise *and* beats it by ``>= GRID_STRIDE_MIN_SPEEDUP`` on at least
+  one kernel — the tentpole perf claim of the grid-stride lowering;
 * the ``autotune`` section produced a cell per pick kernel in both runs
   (tuned-vs-heuristic bitwise equality and the zero-measurement warm
   cache hit asserted in-process), and on the committed baseline the
@@ -48,7 +56,7 @@ by diffing the smoke output against the committed baseline
   (``ESTIMATE_MAX_GFLOPS``/``ESTIMATE_MAX_GBPS``) so cost-model rot
   shows up here instead of silently mis-pruning candidates.
 
-Usage: ``python benchmarks/check_smoke.py BENCH_SMOKE.json BENCH_PR9.json``
+Usage: ``python benchmarks/check_smoke.py BENCH_SMOKE.json BENCH_PR10.json``
 """
 
 from __future__ import annotations
@@ -63,6 +71,9 @@ from benchmarks.run import (  # noqa: E402
     AUTOTUNE_PICKS,
     GRAPH_DEPTHS,
     PLACEMENT_DEVICES,
+    STRIDE_GRIDS,
+    STRIDE_KERNELS,
+    STRIDE_SMOKE_GRIDS,
     SWEEP_SMOKE_PICKS,
 )
 
@@ -75,6 +86,13 @@ GRAPH_MIN_SPEEDUP = 1.5  # baseline deepest-chain replay-vs-eager floor
 PLACEMENT_FIELDS = ("us", "throughput_x", "devices_used", "cpus")
 PLACEMENT_MIN_SCALING = 1.6  # 4-dev/4-stream throughput floor (cpus >= 4)
 PLACEMENT_GATE_DEVICES = 4
+STRIDE_FIELDS = ("chunked8_us", "clamp1_us", "stride_us", "stride_vs_clamp_x")
+GRID_STRIDE_MIN_SPEEDUP = 1.3  # stride-vs-clamp floor, >= 1 baseline kernel
+# never-slower margin: stride must stay within this factor of the
+# clamped-chunk fallback on *every* committed-baseline cell (the two
+# schedules execute the same grid of blocks, so a real loss means the
+# stride loop itself regressed, not the workload)
+STRIDE_SLOWDOWN_TOL = 1.15
 # slowest/best spread below this is timing noise: on a time-shared host
 # equal-cost cells reorder by up to ~1.7x run to run (measured on the
 # 1-core dev container), so the autotune gate only binds where a
@@ -155,6 +173,7 @@ def main(argv: list[str]) -> None:
     check_streams(smoke, baseline, row_names)
     check_graph(smoke, baseline, row_names)
     check_placement(smoke, baseline, row_names)
+    check_grid_stride(smoke, baseline, row_names)
     check_autotune(baseline)
     check_autotune_section(smoke, baseline, row_names)
     check_health(smoke)
@@ -167,7 +186,10 @@ def main(argv: list[str]) -> None:
         f"{max(GRAPH_DEPTHS)} speedup ≥ {GRAPH_MIN_SPEEDUP}x); "
         f"placement cells × {len(PLACEMENT_DEVICES)} pool sizes present "
         f"(≥ {PLACEMENT_MIN_SCALING}x at {PLACEMENT_GATE_DEVICES} devices "
-        f"when cpus ≥ {PLACEMENT_GATE_DEVICES}); autotune picks checked "
+        f"when cpus ≥ {PLACEMENT_GATE_DEVICES}); grid_stride cells × "
+        f"{len(STRIDE_KERNELS)} kernels present (baseline stride never "
+        f"> {STRIDE_SLOWDOWN_TOL}x clamp, best ≥ "
+        f"{GRID_STRIDE_MIN_SPEEDUP}x); autotune picks checked "
         f"({len(AUTOTUNE_PICKS)} tuned kernels: never-slower ≤ "
         f"{AUTOTUNE_NOISE_X}x, chunk picks + estimate bounds); "
         f"equality asserts ran in-process"
@@ -283,6 +305,100 @@ def check_placement(smoke: dict, baseline: dict, row_names: set) -> None:
             fail(f"placement.devices_{dev}: CSV row missing from smoke output")
 
 
+def check_grid_stride(smoke: dict, baseline: dict, row_names: set) -> None:
+    """Gate the grid-stride lowering.  Coverage + provenance on both
+    runs (the cost model must route to ``grid_stride`` on its own under
+    the section's forced-small footprint budget — ``schedule_source ==
+    'heuristic'``, never a fallback or an explicit pin); the perf gates
+    bind on the committed full-run baseline only (smoke runs 1 timing
+    iteration):
+
+    * never-slower — every baseline cell's ``stride_us`` stays within
+      ``STRIDE_SLOWDOWN_TOL`` of ``clamp1_us``, the clamped-chunk
+      fallback the stride schedule replaced (both schedules execute the
+      same grid of blocks, so a real loss is a stride-loop regression);
+    * amortization — at least one baseline kernel cell shows
+      ``stride_vs_clamp_x >= GRID_STRIDE_MIN_SPEEDUP``: looping
+      ``n_resident`` slots over the oversubscribed grid actually
+      amortizes the per-wave dispatch overhead the one-block-per-wave
+      clamp pays ``grid`` times."""
+    if "grid_stride" not in smoke.get("sections", []):
+        fail(f"smoke run missed the grid_stride section: {smoke.get('sections')}")
+    for tag, payload, grids in (
+        ("smoke", smoke, STRIDE_SMOKE_GRIDS),
+        ("baseline", baseline, STRIDE_GRIDS),
+    ):
+        cells = {
+            (e.get("kernel"), e.get("grid")): e
+            for e in payload.get("grid_stride", [])
+        }
+        for kernel in STRIDE_KERNELS:
+            for grid in grids:
+                entry = cells.get((kernel, grid))
+                if entry is None:
+                    fail(
+                        f"{tag}: grid_stride cell ({kernel}, g{grid}) missing "
+                        f"(present: {sorted(cells)})"
+                    )
+                for field in STRIDE_FIELDS:
+                    value = entry.get(field)
+                    if not isinstance(value, (int, float)) or value <= 0:
+                        fail(
+                            f"{tag}: grid_stride {kernel} g{grid}: field "
+                            f"{field!r} missing or non-positive ({value!r})"
+                        )
+                if entry.get("schedule") != "grid_stride":
+                    fail(
+                        f"{tag}: grid_stride {kernel} g{grid}: resolved "
+                        f"schedule is {entry.get('schedule')!r} — the cost "
+                        f"model no longer routes oversubscribed grids to "
+                        f"the stride schedule"
+                    )
+                if entry.get("schedule_source") != "heuristic":
+                    fail(
+                        f"{tag}: grid_stride {kernel} g{grid}: "
+                        f"schedule_source is {entry.get('schedule_source')!r} "
+                        f"(expected 'heuristic' — the verdict must fire on "
+                        f"its own, not via a pin or fallback)"
+                    )
+                n_res = entry.get("n_resident")
+                if not isinstance(n_res, int) or n_res < 1:
+                    fail(
+                        f"{tag}: grid_stride {kernel} g{grid}: n_resident "
+                        f"{n_res!r} is not a positive int"
+                    )
+    for kernel in STRIDE_KERNELS:
+        for grid in STRIDE_SMOKE_GRIDS:
+            if f"grid_stride.{kernel}_g{grid}" not in row_names:
+                fail(f"grid_stride.{kernel}_g{grid}: CSV row missing from smoke")
+
+    # perf gates: committed full-run baseline only
+    base_cells = {
+        (e["kernel"], e["grid"]): e for e in baseline.get("grid_stride", [])
+    }
+    best = 0.0
+    for (kernel, grid), entry in sorted(base_cells.items()):
+        if entry["stride_us"] > STRIDE_SLOWDOWN_TOL * entry["clamp1_us"]:
+            fail(
+                f"baseline grid_stride {kernel} g{grid}: stride "
+                f"{entry['stride_us']}us is "
+                f"{entry['stride_us'] / entry['clamp1_us']:.2f}x slower than "
+                f"the clamped-chunk fallback at {entry['clamp1_us']}us "
+                f"(> {STRIDE_SLOWDOWN_TOL}x tolerance) — the resident-wave "
+                f"loop regressed; regenerate BENCH_PR10.json or fix the "
+                f"stride executor"
+            )
+        best = max(best, entry["stride_vs_clamp_x"])
+    if best < GRID_STRIDE_MIN_SPEEDUP:
+        fail(
+            f"baseline grid_stride: best stride-vs-clamp speedup {best}x < "
+            f"{GRID_STRIDE_MIN_SPEEDUP}x on every kernel — grid-stride no "
+            f"longer amortizes per-wave dispatch over the oversubscribed "
+            f"grid; regenerate BENCH_PR10.json on an idle host or fix the "
+            f"stride executor"
+        )
+
+
 def check_autotune(baseline: dict) -> None:
     """The all-auto heuristics must not pick the slowest measured cell.
     Checked on the committed full run only (smoke runs 1 iteration —
@@ -296,14 +412,14 @@ def check_autotune(baseline: dict) -> None:
             fail(
                 f"{kernel}: baseline sweep entry carries no auto_cell — "
                 f"regenerate the baseline (python benchmarks/run.py "
-                f"--sections backend_sweep ... --json BENCH_PR9.json)"
+                f"--sections backend_sweep ... --json BENCH_PR10.json)"
             )
         chunk = entry.get("auto_chunk")
         if not isinstance(chunk, int) or chunk < 1:
             fail(
                 f"{kernel}: baseline sweep entry carries no auto_chunk "
                 f"({chunk!r}) — regenerate the baseline with the "
-                f"chunk-resolving sweep (BENCH_PR9.json)"
+                f"chunk-resolving sweep (BENCH_PR10.json)"
             )
         if entry.get("chunk_source") not in (
             "heuristic",

@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` also
 writes every row (plus the structured backend-sweep matrix) to a
-machine-readable JSON file (default path ``BENCH_PR6.json``) so the
+machine-readable JSON file (default path ``BENCH_PR10.json``) so the
 perf trajectory is recorded across PRs.  ``--sections a,b`` runs a
 subset; ``--smoke`` is the CI regression guard (1 timing iteration,
 flagship kernels only).
@@ -24,6 +24,11 @@ flagship kernels only).
                   over 1/2/4/8-device pools (subprocess, 8 forced host
                   devices), bitwise equality vs the 1-device pool
                   asserted + throughput ratio per pool size
+  grid_stride   — resident waves over oversubscribed grids: 64k–256k
+                  blocks under a forced-small COX_FOOTPRINT_BUDGET,
+                  the cost-model-routed grid-stride schedule vs the
+                  unconstrained chunk-table walk and the clamped-chunk
+                  fallback it replaces, bitwise asserted per cell
   autotune      — measured knob tuning vs the hand heuristics: each pick
                   kernel launched with the heuristic knobs, then with
                   autotune=True (cold: candidate cells measured into a
@@ -62,6 +67,7 @@ STREAM_RESULTS = []  # structured streams-overlap cells
 GRAPH_RESULTS = []   # structured graph-replay cells
 PLACEMENT_RESULTS = []  # structured multi-device placement cells
 AUTOTUNE_RESULTS = []   # structured heuristic-vs-tuned cells
+GRID_STRIDE_RESULTS = []  # structured oversubscribed-schedule cells
 
 # device-pool sizes every placement run must cover — module-level so the
 # CI regression gate (benchmarks/check_smoke.py) can assert coverage
@@ -85,6 +91,14 @@ SWEEP_FULL_PICKS = ("vectorAdd", "MatrixMulCUDA", "matrixMul1D",
 # vmap kernels and warp-batched candidates)
 AUTOTUNE_PICKS = ("MatrixMulCUDA", "transpose", "warpPrefixStats",
                   "saxpyHeavy")
+
+# grid_stride kernels and oversubscribed grid sizes every run must
+# cover — module-level so the CI regression gate can assert coverage;
+# the smoke run covers the first grid only (the quarter-million-block
+# clamped cells need full timing iterations to be worth recording)
+STRIDE_KERNELS = ("strideSaxpy", "strideHist")
+STRIDE_GRIDS = (1 << 16, 1 << 18)
+STRIDE_SMOKE_GRIDS = (1 << 16,)
 
 
 def _time_call(fn, *args, warmup=None, iters=None):
@@ -322,6 +336,9 @@ def backend_sweep():
             "auto_cell": auto_cell,
             "auto_chunk": auto_chunk,
             "chunk_source": rl_auto.chunk_source,
+            "auto_schedule": rl_auto.schedule,
+            "schedule_source": rl_auto.schedule_source,
+            "auto_n_resident": rl_auto.n_resident,
             "times_us": {c: round(t, 1) for c, t in times.items()},
             "warp_batch_speedup_scan": round(wb, 2),
             "warp_batch_speedup_vmap": round(
@@ -654,6 +671,122 @@ def autotune():
 # ---------------------------------------------------------------------------
 
 
+def grid_stride():
+    """Grid-stride lowering on oversubscribed grids: a fixed wave of
+    resident block slots loops over strided block ids instead of the
+    host materializing an O(grid) chunk table.  Per (kernel, grid)
+    three cells, all launched over the same small bound working set so
+    the *schedule machinery* dominates the wall time:
+
+    * ``chunked8`` — the unconstrained chunk-table walk at the default
+      wave width (``chunk=8``), the pre-budget baseline;
+    * ``clamp1``   — the clamped-chunk fallback the autotuner used to
+      take when no chunk fit the footprint budget (``chunk=1``: one
+      merge pass per *block*, grid of them — the failure mode the
+      stride schedule replaces);
+    * ``stride``   — all knobs on auto under a forced-small
+      ``COX_FOOTPRINT_BUDGET`` (the satellite env override): the cost
+      model must route to grid-stride on its own, and the resolved
+      provenance is recorded for the CI gate.
+
+    Bitwise equality across all three cells is asserted before any
+    timing; ``benchmarks/check_smoke.py`` gates the committed baseline
+    on stride never losing to clamp and beating it >= 1.3x on at least
+    one kernel."""
+    from repro.core import costmodel
+
+    @cox.kernel
+    def strideSaxpy(c, out: cox.Array(cox.f32), x: cox.Array(cox.f32),
+                    y: cox.Array(cox.f32), n: cox.i32):
+        i = c.block_idx() * c.block_dim() + c.thread_idx()
+        if i < n:
+            out[i] = 2.5 * x[i] + y[i]
+
+    @cox.kernel
+    def strideHist(c, hist: cox.Array(cox.f32), data: cox.Array(cox.i32),
+                   n: cox.i32):
+        i = c.block_idx() * c.block_dim() + c.thread_idx()
+        if i < n:
+            c.atomic_add(hist, data[i], 1.0)
+
+    # deliberately tiny blocks + working set: per-block execution cost
+    # on XLA-CPU is scatter-bound and schedule-invariant, so the wave
+    # loop's fixed overhead — the term grid-stride amortizes over
+    # n_resident slots — only shows when blocks are cheap
+    block, n = 8, 256
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(n).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    data = rng.integers(0, 64, size=n).astype(np.int32)
+    cases = {
+        "strideSaxpy": (strideSaxpy, "out",
+                        (np.zeros(n, np.float32), x, y, np.int32(n))),
+        "strideHist": (strideHist, "hist",
+                       (np.zeros(64, np.float32), data, np.int32(n))),
+    }
+    grids = STRIDE_SMOKE_GRIDS if SMOKE else STRIDE_GRIDS
+    # any chunk's bid table is >= 256 KiB at 64k blocks, so a 128 KiB
+    # budget forces the stride verdict on the bench-sized working set
+    budget = 128 << 10
+    prev = os.environ.get(costmodel.ENV_BUDGET)
+    os.environ[costmodel.ENV_BUDGET] = str(budget)
+    try:
+        for name in STRIDE_KERNELS:
+            kf, key, args = cases[name]
+            for grid in grids:
+
+                def run(grid=grid, kf=kf, args=args, **kw):
+                    return kf.launch(grid=grid, block=block, args=args,
+                                     backend="vmap", **kw)
+
+                rl = kf.make_request(grid=grid, block=block, args=args,
+                                     backend="vmap").rl
+                assert rl.schedule == "grid_stride", \
+                    f"{name} g{grid}: verdict stayed {rl.schedule!r} " \
+                    f"under a {budget}-byte budget"
+                out_c8 = run(chunk=8)
+                out_c1 = run(chunk=1)
+                out_gs = run()
+                for tag, out in (("clamp1", out_c1), ("stride", out_gs)):
+                    np.testing.assert_array_equal(
+                        np.asarray(out[key]), np.asarray(out_c8[key]),
+                        err_msg=f"{name} g{grid}: {tag} != chunked8")
+                times = {
+                    "chunked8_us": _time_call(lambda run=run: run(chunk=8)),
+                    "clamp1_us": _time_call(lambda run=run: run(chunk=1)),
+                    "stride_us": _time_call(lambda run=run: run()),
+                }
+                vs_clamp = times["clamp1_us"] / times["stride_us"]
+                vs_c8 = times["chunked8_us"] / times["stride_us"]
+                _row(f"grid_stride.{name}_g{grid}", times["stride_us"],
+                     f"chunked8_us={times['chunked8_us']:.1f};"
+                     f"clamp1_us={times['clamp1_us']:.1f};"
+                     f"stride_vs_clamp={vs_clamp:.2f}x;"
+                     f"stride_vs_chunked={vs_c8:.2f}x;"
+                     f"n_resident={rl.n_resident};"
+                     f"source={rl.schedule_source};budget={budget}")
+                GRID_STRIDE_RESULTS.append({
+                    "kernel": name, "grid": grid, "block": block, "n": n,
+                    "budget": budget,
+                    "schedule": rl.schedule,
+                    "schedule_source": rl.schedule_source,
+                    "n_resident": rl.n_resident,
+                    "chunked8_us": round(times["chunked8_us"], 1),
+                    "clamp1_us": round(times["clamp1_us"], 1),
+                    "stride_us": round(times["stride_us"], 1),
+                    "stride_vs_clamp_x": round(vs_clamp, 2),
+                    "stride_vs_chunked_x": round(vs_c8, 2),
+                })
+    finally:
+        if prev is None:
+            os.environ.pop(costmodel.ENV_BUDGET, None)
+        else:
+            os.environ[costmodel.ENV_BUDGET] = prev
+
+
+# ---------------------------------------------------------------------------
+
+
 def scalability():
     """Fig. 14: multi-block kernels across host devices (8-dev subprocess
     — device count must be set before jax initializes)."""
@@ -703,6 +836,7 @@ SECTIONS = {
     "graph_replay": graph_replay,
     "placement": placement,
     "autotune": autotune,
+    "grid_stride": grid_stride,
     "scalability": scalability,
     "roofline": roofline,
 }
@@ -711,10 +845,10 @@ SECTIONS = {
 def main(argv=None) -> None:
     global WARMUP, ITERS, SMOKE
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--json", nargs="?", const="BENCH_PR9.json", default=None,
+    p.add_argument("--json", nargs="?", const="BENCH_PR10.json", default=None,
                    metavar="PATH",
                    help="write machine-readable results (default path "
-                        "BENCH_PR9.json when the flag is given bare)")
+                        "BENCH_PR10.json when the flag is given bare)")
     p.add_argument("--sections", default=None,
                    help=f"comma-separated subset of {sorted(SECTIONS)}")
     p.add_argument("--smoke", action="store_true",
@@ -734,7 +868,7 @@ def main(argv=None) -> None:
         from benchmarks import roofline as _roofline
         from repro.core import autotune as _at
         payload = {
-            "schema": "cox-bench-v4",
+            "schema": "cox-bench-v5",
             "smoke": SMOKE,
             "iters": ITERS,
             "sections": names,
@@ -744,6 +878,7 @@ def main(argv=None) -> None:
             "graph_replay": GRAPH_RESULTS,
             "placement": PLACEMENT_RESULTS,
             "autotune": AUTOTUNE_RESULTS,
+            "grid_stride": GRID_STRIDE_RESULTS,
             "autotune_stats": _at.stats(),
             # live per-stage-key counters from the dispatcher, placed on
             # the host roofline (estimates vs CPU peaks); rows carrying

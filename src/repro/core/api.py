@@ -114,6 +114,8 @@ class KernelFn:
                      simd: bool = True, warp_size: int = WARP_SIZE,
                      mesh=None, axis: str = "data", backend: str = "auto",
                      chunk=None, warp_exec: str = "auto",
+                     schedule: str = "auto",
+                     n_resident: Optional[int] = None,
                      donate: bool = False, device: Any = None,
                      autotune: Optional[bool] = None
                      ) -> _streams.LaunchRequest:
@@ -133,6 +135,13 @@ class KernelFn:
         ``COX_AUTOTUNE`` env (plus ``chunk='auto'``, which always
         tunes).
 
+        ``schedule=`` picks the launch schedule: ``'auto'`` (default)
+        lets the footprint verdict choose between the chunk-table walk
+        and the grid-stride loop once argument shapes are bound;
+        ``'chunked'``/``'grid_stride'`` force either (explicit, never
+        overridden by the autotuner), and ``n_resident=`` sizes the
+        grid-stride wave (implies ``schedule='grid_stride'``).
+
         ``device=`` pins the launch to one XLA device (multi-device
         placement; mutually exclusive with ``mesh``, which spans its
         own device set) — left ``None``, the dispatcher's placement
@@ -149,8 +158,10 @@ class KernelFn:
         ck = self._compiled_for(token)
         rl = _runtime.resolve_launch(ck, grid=grid, block=block3, mode=mode,
                                      backend=backend, warp_exec=warp_exec,
-                                     chunk=chunk, mesh=mesh)
+                                     chunk=chunk, schedule=schedule,
+                                     n_resident=n_resident, mesh=mesh)
         globals_, shapes, scalars = bind_kernel_args(ck, args)
+        rl = _runtime.resolve_schedule(ck, rl, shapes)
         tune = (autotune if autotune is not None
                 else (chunk == "auto" or _autotune.enabled()))
         if tune:
@@ -173,7 +184,9 @@ class KernelFn:
                collapse: str = "hybrid", mode: str = "auto",
                simd: bool = True, warp_size: int = WARP_SIZE,
                mesh=None, axis: str = "data", backend: str = "auto",
-               chunk=None, warp_exec: str = "auto", donate: bool = False,
+               chunk=None, warp_exec: str = "auto",
+               schedule: str = "auto", n_resident: Optional[int] = None,
+               donate: bool = False,
                device: Any = None, autotune: Optional[bool] = None,
                stream: Optional[Stream] = None) -> Dict[str, Any]:
         """Launch with backend dispatch (see ``repro.core.backends``):
@@ -208,6 +221,7 @@ class KernelFn:
             grid=grid, block=block, args=args, collapse=collapse,
             mode=mode, simd=simd, warp_size=warp_size, mesh=mesh,
             axis=axis, backend=backend, chunk=chunk, warp_exec=warp_exec,
+            schedule=schedule, n_resident=n_resident,
             donate=donate, device=device, autotune=autotune,
             stream=stream).arrays()
 

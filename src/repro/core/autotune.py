@@ -3,11 +3,13 @@
 The ``flat.choose_*`` heuristics are good defaults, but CuPBoP and
 Polygeist both find CPU-side parity hinges on *per-kernel* scheduling
 configuration.  This module measures a small candidate set — chunk ∈
-``CHUNK_CANDIDATES`` × backend × warp_exec, pruned by the cost model
-(chunk tables that blow the ``costmodel.chunk_footprint`` budget fall
-back to the largest fitting grid-stride chunk) — and persists winners
-in ``~/.cache/cox/autotune.json`` so a production fleet warms once,
-not once per boot.
+``CHUNK_CANDIDATES`` × backend × warp_exec × schedule, pruned by the
+cost model (chunked cells whose table + wave footprint blows the
+``costmodel`` budget are replaced by grid-stride cells sized by
+``costmodel.resident_slots``; the old chunk clamp survives only as a
+last resort for explicitly pinned ``schedule='chunked'``) — and
+persists winners in ``~/.cache/cox/autotune.json`` so a production
+fleet warms once, not once per boot.
 
 Contract with the resolver (``runtime.ResolvedLaunch``):
 
@@ -43,7 +45,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from . import costmodel as _costmodel
 from .types import GraphRef
 
-AUTOTUNE_VERSION = 1
+AUTOTUNE_VERSION = 2   # v2: records/keys carry the launch schedule
 ENV_CACHE = "COX_AUTOTUNE_CACHE"    # cache file path, or 'off' to disable
 ENV_ENABLE = "COX_AUTOTUNE"         # '1' tunes every all-auto launch
 CHUNK_CANDIDATES = (4, 8, 16, 32)
@@ -184,17 +186,19 @@ def _seed_from_disk() -> None:
 
 
 def cache_key(token: tuple, ck, rl, shapes: Dict[str, tuple], *,
-              simd: bool, tunable: Tuple[bool, bool, bool]) -> str:
-    """Launch-cache-style key + CPU fingerprint.  The *tunable* mask is
-    part of the key: a launch with an explicit backend tunes a smaller
-    space and must not collide with the all-auto winner."""
+              simd: bool,
+              tunable: Tuple[bool, bool, bool, bool]) -> str:
+    """Launch-cache-style key + CPU fingerprint.  The *tunable* mask
+    (backend, warp_exec, chunk, schedule) is part of the key: a launch
+    with an explicit backend tunes a smaller space and must not collide
+    with the all-auto winner."""
     shape_sig = ",".join("%s:%s" % (k, "x".join(map(str, v)))
                          for k, v in sorted(shapes.items()))
     return "|".join([
         ck.kernel.name, repr(token), str(ck.n_phases),
         "g%s" % (rl.grid.astuple(),), "b%s" % (rl.block.astuple(),),
         "simd%d" % int(simd),
-        "t%d%d%d" % tuple(int(t) for t in tunable),
+        "t%d%d%d%d" % tuple(int(t) for t in tunable),
         shape_sig, cpu_fingerprint(),
     ])
 
@@ -208,41 +212,69 @@ class Candidate:
     backend: str
     warp_exec: str
     chunk: int
+    schedule: str = "chunked"
+    n_resident: Optional[int] = None
 
     @property
     def label(self) -> str:
+        if self.schedule == "grid_stride":
+            return "%s/%s/gs%d" % (self.backend, self.warp_exec,
+                                   self.n_resident or 1)
         return "%s/%s/c%d" % (self.backend, self.warp_exec, self.chunk)
+
+    @property
+    def key(self) -> tuple:
+        return (self.backend, self.warp_exec, self.chunk, self.schedule,
+                self.n_resident)
 
 
 def _chunk_candidates(ck, rl, shapes, *, warp_exec: str,
-                      tunable_chunk: bool) -> List[int]:
-    """Chunk values worth measuring for a vmap-family backend, pruned
-    by the footprint model: candidates whose ``chunk ×`` per-block
-    copies blow the residency budget are dropped in favor of the
-    largest fitting (grid-stride) chunk."""
+                      tunable_chunk: bool,
+                      allow_empty: bool = False) -> List[int]:
+    """Chunked-schedule chunk values worth measuring for a vmap-family
+    backend, pruned by the footprint model (wave copies **plus** the
+    materialized O(grid) bid table).  ``allow_empty=True`` lets an
+    all-over-budget set come back empty — the caller swaps in
+    grid-stride cells instead.  When the schedule is pinned 'chunked'
+    (``allow_empty=False``) the old clamp survives as a last resort:
+    shrink the wave until its copies fit (the table term cannot shrink,
+    so this only bounds wave memory)."""
     grid = rl.grid.total
     if not tunable_chunk:
         return [rl.chunk]
     cands = sorted({c for c in CHUNK_CANDIDATES if c <= grid} | {rl.chunk})
+    budget = _costmodel.footprint_budget()
     fitting = [c for c in cands
                if _costmodel.chunk_footprint(
                    ck, shapes, chunk=c, n_warps=rl.n_warps,
-                   warp_exec=warp_exec) <= _costmodel.FOOTPRINT_BUDGET]
-    if not fitting:
-        # even the smallest table blows the budget: grid-stride down to
-        # the largest chunk the model accepts (floor 1 — always legal)
+                   warp_exec=warp_exec, grid=grid) <= budget]
+    if not fitting and not allow_empty:
         c = min(cands)
         while c > 1 and _costmodel.chunk_footprint(
                 ck, shapes, chunk=c, n_warps=rl.n_warps,
-                warp_exec=warp_exec) > _costmodel.FOOTPRINT_BUDGET:
+                warp_exec=warp_exec) > budget:
             c //= 2
         fitting = [max(1, c)]
     return fitting
 
 
-def _candidates(ck, rl, shapes, *, tunable: Tuple[bool, bool, bool]
+def _stride_candidates(ck, rl, shapes, *, warp_exec: str) -> List[int]:
+    """Grid-stride wave widths worth measuring: the cost-model-sized
+    width (``costmodel.resident_slots``) plus the resolver's pick when
+    it already strided — a two-cell-max set, since stride footprint is
+    grid-independent and the sizer already found the widest fit."""
+    grid = rl.grid.total
+    widths = {_costmodel.resident_slots(ck, shapes, grid=grid,
+                                        n_warps=rl.n_warps,
+                                        warp_exec=warp_exec)}
+    if rl.schedule == "grid_stride" and rl.n_resident:
+        widths.add(min(int(rl.n_resident), grid))
+    return sorted(widths)
+
+
+def _candidates(ck, rl, shapes, *, tunable: Tuple[bool, bool, bool, bool]
                 ) -> List[Candidate]:
-    tune_backend, tune_warp, tune_chunk = tunable
+    tune_backend, tune_warp, tune_chunk, tune_sched = tunable
     grid = rl.grid.total
     from . import flat as _flat
     atomic_old = _flat.captures_atomic_old(ck.kernel)
@@ -256,19 +288,36 @@ def _candidates(ck, rl, shapes, *, tunable: Tuple[bool, bool, bool]
     out: List[Candidate] = []
     for b in backends:
         for w in warps:
-            # chunk only changes the vmap wave width; scan ignores it,
-            # so scan cells collapse to the resolved chunk
-            chunks = ([rl.chunk] if b == "scan" else
-                      _chunk_candidates(ck, rl, shapes, warp_exec=w,
-                                        tunable_chunk=tune_chunk))
+            if b == "scan":
+                # chunk only changes the vmap wave width; scan ignores
+                # it, so scan cells collapse to the resolved schedule
+                out.append(Candidate(b, w, rl.chunk, rl.schedule,
+                                     rl.n_resident))
+                continue
+            if not tune_sched and rl.schedule == "grid_stride":
+                # schedule pinned strided (explicit/cooperative): vary
+                # backend/warp only, keep the wave width
+                out.append(Candidate(b, w, rl.chunk, "grid_stride",
+                                     rl.n_resident))
+                continue
+            chunks = _chunk_candidates(ck, rl, shapes, warp_exec=w,
+                                       tunable_chunk=tune_chunk,
+                                       allow_empty=tune_sched)
             for c in chunks:
-                out.append(Candidate(b, w, c))
+                out.append(Candidate(b, w, c, "chunked", None))
+            if tune_sched and (not chunks
+                               or rl.schedule == "grid_stride"):
+                # the chunk table blows the budget (or the resolver
+                # already strided): grid-stride cells replace the old
+                # blind chunk clamp
+                for r in _stride_candidates(ck, rl, shapes, warp_exec=w):
+                    out.append(Candidate(b, w, r, "grid_stride", r))
     # de-dup preserving order (heuristic cell may coincide with a grid one)
     seen = set()
     uniq = []
     for cand in out:
-        if (cand.backend, cand.warp_exec, cand.chunk) not in seen:
-            seen.add((cand.backend, cand.warp_exec, cand.chunk))
+        if cand.key not in seen:
+            seen.add(cand.key)
             uniq.append(cand)
     return uniq
 
@@ -297,7 +346,9 @@ def _measure(ck, rl, cand: Candidate, *, simd: bool, shapes,
     import jax
     from . import runtime as _runtime
     rl_c = dataclasses.replace(rl, backend=cand.backend,
-                               warp_exec=cand.warp_exec, chunk=cand.chunk)
+                               warp_exec=cand.warp_exec, chunk=cand.chunk,
+                               schedule=cand.schedule,
+                               n_resident=cand.n_resident)
     try:
         _, exe = _runtime.build_resolved(ck, rl_c, simd=simd)
         g = _zero_globals(ck, shapes)
@@ -318,10 +369,10 @@ def _measure(ck, rl, cand: Candidate, *, simd: bool, shapes,
         return None
 
 
-def _apply_record(rl, rec: dict, *, tunable: Tuple[bool, bool, bool]):
+def _apply_record(rl, rec: dict, *, tunable: Tuple[bool, bool, bool, bool]):
     """Rebuild a ResolvedLaunch from a cached winner, honoring the
     tunable mask — a record can never move a knob the caller pinned."""
-    tune_backend, tune_warp, tune_chunk = tunable
+    tune_backend, tune_warp, tune_chunk, tune_sched = tunable
     kw: Dict[str, Any] = {}
     if tune_backend and rec.get("backend") in ("scan", "vmap"):
         kw["backend"] = rec["backend"]
@@ -331,6 +382,17 @@ def _apply_record(rl, rec: dict, *, tunable: Tuple[bool, bool, bool]):
             and rec["chunk"] >= 1:
         kw["chunk"] = min(rec["chunk"], rl.grid.total)
         kw["chunk_source"] = "autotuned"
+    if tune_sched and rec.get("schedule") in ("chunked", "grid_stride"):
+        nr = rec.get("n_resident")
+        if rec["schedule"] == "grid_stride" \
+                and isinstance(nr, int) and nr >= 1:
+            kw["schedule"] = "grid_stride"
+            kw["n_resident"] = min(nr, rl.grid.total)
+            kw["schedule_source"] = "autotuned"
+        elif rec["schedule"] == "chunked":
+            kw["schedule"] = "chunked"
+            kw["n_resident"] = None
+            kw["schedule_source"] = "autotuned"
     if not kw:
         return rl
     with _lock:
@@ -358,7 +420,8 @@ def tune(ck, token: tuple, rl, *, shapes: Dict[str, tuple],
                                     for v in globals_.values()):
         return rl
     tunable = (req_backend == "auto", req_warp_exec == "auto",
-               rl.chunk_source == "heuristic")
+               rl.chunk_source == "heuristic",
+               rl.schedule_source == "heuristic")
     if not any(tunable):
         return rl
     key = cache_key(token, ck, rl, shapes, simd=simd, tunable=tunable)
@@ -391,11 +454,14 @@ def tune(ck, token: tuple, rl, *, shapes: Dict[str, tuple],
         return rl
     est = _costmodel.estimate(ck, dataclasses.replace(
         rl, backend=best_cand.backend, warp_exec=best_cand.warp_exec,
-        chunk=best_cand.chunk), shapes, simd=simd, mode="xla")
+        chunk=best_cand.chunk, schedule=best_cand.schedule,
+        n_resident=best_cand.n_resident), shapes, simd=simd, mode="xla")
     rec = {
         "backend": best_cand.backend,
         "warp_exec": best_cand.warp_exec,
         "chunk": best_cand.chunk,
+        "schedule": best_cand.schedule,
+        "n_resident": best_cand.n_resident,
         "best_us": best_t * 1e6,
         "times_us": {k: v * 1e6 for k, v in sorted(times.items())},
         "op_estimate": est.op_estimate,

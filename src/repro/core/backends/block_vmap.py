@@ -15,7 +15,7 @@ sequential loop of narrow ones.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +26,24 @@ from . import merge
 from .plan import LaunchPlan
 
 name = "vmap"
+
+
+def _merge_wave(plan: LaunchPlan, block_fn, bids, g,
+                scalars: Dict[str, Any], *, fold_deltas: bool):
+    """One vmap wave over ``bids`` (-1 marking pad slots) + the
+    write-mask/atomic-delta merge — the body both the chunk-table walk
+    and the grid-stride loop run, so the two schedules are the same
+    computation over the same wave contents."""
+    u = plan.uniforms(bids, scalars)                # bid: (chunk,)
+    u_axes = {k: (0 if k == "bid" else None) for k in u}
+    g2, m2, d2 = jax.vmap(lambda uu, gg: block_fn(uu, gg),
+                          in_axes=(u_axes, None))(u, g)
+    # pad slots (bid < 0) ran with garbage indices; their writes are
+    # discarded by zeroing the masks/deltas before the merge
+    valid = (bids >= 0)[:, None]
+    m2 = {k: v & valid for k, v in m2.items()}
+    d2 = {k: jnp.where(valid, v, 0) for k, v in d2.items()}
+    return merge.merge_chunk(g, g2, m2, d2, fold_deltas=fold_deltas)
 
 
 def run_chunked(plan: LaunchPlan, block_fn, bid_chunks, globals_,
@@ -46,17 +64,8 @@ def run_chunked(plan: LaunchPlan, block_fn, bid_chunks, globals_,
 
     def chunk_step(carry, bids):
         g, m_acc, d_acc = carry
-        u = plan.uniforms(bids, scalars)            # bid: (chunk,)
-        u_axes = {k: (0 if k == "bid" else None) for k in u}
-        g2, m2, d2 = jax.vmap(lambda uu, gg: block_fn(uu, gg),
-                              in_axes=(u_axes, None))(u, g)
-        # pad slots (bid < 0) ran with garbage indices; their writes are
-        # discarded by zeroing the masks/deltas before the merge
-        valid = (bids >= 0)[:, None]
-        m2 = {k: v & valid for k, v in m2.items()}
-        d2 = {k: jnp.where(valid, v, 0) for k, v in d2.items()}
-        g, wrote, dsum = merge.merge_chunk(g, g2, m2, d2,
-                                           fold_deltas=fold_deltas)
+        g, wrote, dsum = _merge_wave(plan, block_fn, bids, g, scalars,
+                                     fold_deltas=fold_deltas)
         if track:
             m_acc = {k: m_acc[k] | wrote[k] for k in m_acc}
             d_acc = {k: d_acc[k] + dsum[k] for k in d_acc}
@@ -64,6 +73,47 @@ def run_chunked(plan: LaunchPlan, block_fn, bid_chunks, globals_,
 
     (g, m, d), _ = lax.scan(chunk_step, (globals_, masks0, deltas0),
                             jnp.asarray(bid_chunks))
+    return g, m, d
+
+
+def run_strided(plan: LaunchPlan, block_fn, globals_,
+                scalars: Dict[str, Any], *, fold_deltas: bool,
+                base=0, total: Optional[int] = None
+                ) -> Tuple[Dict[str, Any], Dict[str, Any], Dict[str, Any]]:
+    """Grid-stride block executor: a counted ``lax.fori_loop`` over
+    resident waves, each wave a vmap over ``n_resident`` block slots
+    whose ids are computed in-graph (``plan.stride_bids``) — no
+    ``(n_chunks, chunk)`` table is ever materialized, so the working
+    set is ``n_resident × |globals|`` regardless of grid size.
+
+    Wave *i* covers the contiguous ids ``base + [i·R, (i+1)·R)`` —
+    exactly row *i* of the chunk table a chunked plan with ``chunk=R``
+    would walk, so the two schedules produce bitwise-equal results.
+    ``base``/``total`` scope the loop to one device's slice of the grid
+    (``base`` may be a traced ``axis_index`` offset); the defaults
+    cover the whole grid.  Returns ``(globals, masks, deltas)`` exactly
+    like :func:`run_chunked`."""
+    track = not fold_deltas
+    masks0 = merge.zeros_masks(globals_) if track else {}
+    deltas0 = (merge.zeros_deltas(globals_)
+               if track and plan.has_atomics else {})
+    total = plan.grid if total is None else int(total)
+    n_waves = plan.n_stride_waves(total)
+    limit = jnp.minimum(jnp.asarray(base, jnp.int32) + jnp.int32(total),
+                        jnp.int32(plan.grid))
+
+    def wave_step(i, carry):
+        g, m_acc, d_acc = carry
+        bids = plan.stride_bids(i, base=base, limit=limit)
+        g, wrote, dsum = _merge_wave(plan, block_fn, bids, g, scalars,
+                                     fold_deltas=fold_deltas)
+        if track:
+            m_acc = {k: m_acc[k] | wrote[k] for k in m_acc}
+            d_acc = {k: d_acc[k] + dsum[k] for k in d_acc}
+        return (g, m_acc, d_acc)
+
+    g, m, d = lax.fori_loop(0, n_waves, wave_step,
+                            (globals_, masks0, deltas0))
     return g, m, d
 
 
@@ -102,6 +152,13 @@ def build_fn(plan: LaunchPlan, mesh=None, axis: str = "data"):
                              simd=plan.simd, track_writes=True,
                              warp_exec=plan.warp_exec,
                              block_dim=plan.block_dim, grid_dim=plan.grid_dim)
+    if plan.schedule == "grid_stride":
+        def run(globals_, scalars):
+            g, _, _ = run_strided(plan, block_fn, globals_, scalars,
+                                  fold_deltas=True)
+            return g
+
+        return run
     bid_chunks = plan.chunked_bids()
 
     def run(globals_, scalars):
@@ -126,6 +183,8 @@ def _build_phased_fn(plan: LaunchPlan):
     """Cooperative launch: one all-resident vmap wave per phase, globals
     merged (single-writer select + summed atomic deltas) at every phase
     boundary so phase *p+1* observes all of phase *p*'s writes."""
+    if plan.schedule == "grid_stride":
+        return _build_phased_strided_fn(plan)
     fns = plan.block_fns(track_writes=True)
     bids = jnp.arange(plan.grid, dtype=jnp.int32)
 
@@ -135,6 +194,45 @@ def _build_phased_fn(plan: LaunchPlan):
         for fn in fns:
             g, _, _, state = run_phase_wave(plan, fn, bids, g, scalars,
                                             state, fold_deltas=True)
+        return g
+
+    return run
+
+
+def _build_phased_strided_fn(plan: LaunchPlan):
+    """Cooperative grid-stride: each phase runs as a ``fori_loop`` over
+    resident waves of ``n_resident`` blocks, with every block's
+    persistent state paged through ``dynamic_slice`` windows of the
+    stacked O(grid) planes.  All waves of phase *p* complete before
+    phase *p+1* starts (the loop is inside the per-phase step), so the
+    grid barrier's guarantee holds beyond the all-resident capacity —
+    the lowering CUDA itself uses for occupancy-sized cooperative
+    launches.  Single-writer stores and summed deltas make the result
+    equal to the one-wave schedule regardless of wave grouping."""
+    fns = plan.block_fns(track_writes=True)
+    R = plan.n_resident
+    n_waves = plan.n_stride_waves()
+    tmap = jax.tree_util.tree_map
+
+    def run(globals_, scalars):
+        g = globals_
+        # padded to whole waves: pad slots run with bid=-1 and have
+        # their masks/deltas zeroed by run_phase_wave, so the garbage
+        # state they write back is never observed
+        state = plan.init_persist(n_blocks=n_waves * R)
+        for fn in fns:
+            def wave(i, carry, fn=fn):
+                g, st = carry
+                bids = plan.stride_bids(i)
+                st_i = tmap(lambda a: lax.dynamic_slice_in_dim(
+                    a, i * R, R, 0), st)
+                g2, _, _, st2 = run_phase_wave(plan, fn, bids, g, scalars,
+                                               st_i, fold_deltas=True)
+                st = tmap(lambda a, v: lax.dynamic_update_slice_in_dim(
+                    a, v, i * R, 0), st, st2)
+                return g2, st
+
+            g, state = lax.fori_loop(0, n_waves, wave, (g, state))
         return g
 
     return run

@@ -100,12 +100,15 @@ class LaunchPlan:
     grid_dim: Optional[Dim3] = None   # canonical dim3 (set by build)
     block_dim: Optional[Dim3] = None
     n_phases: int = 1          # >1 → cooperative (grid_sync) launch
+    schedule: str = "chunked"  # 'chunked' | 'grid_stride'
+    n_resident: Optional[int] = None  # grid-stride wave width (else None)
 
     @classmethod
     def build(cls, ck: CompiledKernel, *, grid, block,
               mode: str = "normal", simd: bool = True,
               chunk: Optional[int] = None,
-              warp_exec: str = "serial") -> "LaunchPlan":
+              warp_exec: str = "serial", schedule: str = "chunked",
+              n_resident: Optional[int] = None) -> "LaunchPlan":
         grid3 = as_dim3(grid, "grid")
         block3 = as_dim3(block, "block")
         check_launch_geometry(grid3, block3)
@@ -119,20 +122,45 @@ class LaunchPlan:
                              f"'batched' before plan build, got "
                              f"{warp_exec!r} (flat.choose_warp_exec "
                              f"resolves 'auto')")
+        if schedule not in ("chunked", "grid_stride"):
+            raise ValueError(f"schedule must be resolved to 'chunked' or "
+                             f"'grid_stride' before plan build, got "
+                             f"{schedule!r} (runtime.resolve_schedule "
+                             f"resolves 'auto')")
         n_warps = -(-block // ck.warp_size)
         n_phases = ck.n_phases
-        if n_phases > 1:
+        if schedule == "grid_stride":
+            # the wave width doubles as the merge chunk: wave i covers
+            # the contiguous block ids [i·R, (i+1)·R), i.e. exactly row
+            # i of the chunk table a chunked plan with chunk=R would
+            # materialize — which is why the two schedules are bitwise
+            # equal by construction
+            n_resident = (min(grid, DEFAULT_CHUNK) if n_resident is None
+                          else max(1, min(int(n_resident), grid)))
+            if n_phases > 1 and n_resident > COOP_MAX_RESIDENT_BLOCKS:
+                raise CoxUnsupported(
+                    f"cooperative launch of '{ck.kernel.name}': "
+                    f"n_resident={n_resident} exceeds the resident "
+                    f"capacity ({COOP_MAX_RESIDENT_BLOCKS}) — the "
+                    f"grid-stride wave is the resident set, exactly "
+                    f"cudaLaunchCooperativeKernel's occupancy rule")
+            chunk = n_resident
+        elif n_phases > 1:
             # CUDA's cooperative-launch constraint: every block resident
-            # per phase.  The chunk schedule may not split the grid —
+            # per phase.  The chunked schedule may not split the grid —
             # each block's carried state (locals + shared memory) must
-            # stay live across the whole phase sequence.
+            # stay live across the whole phase sequence.  Grids beyond
+            # the capacity take the grid-stride schedule above, which
+            # pages carried state through a capacity-sized wave instead.
             if grid > COOP_MAX_RESIDENT_BLOCKS:
                 raise CoxUnsupported(
                     f"cooperative launch of '{ck.kernel.name}': "
                     f"grid={grid} blocks exceeds the resident capacity "
                     f"({COOP_MAX_RESIDENT_BLOCKS}) — every block must be "
                     f"resident per phase for a grid barrier, exactly "
-                    f"cudaLaunchCooperativeKernel's occupancy rule")
+                    f"cudaLaunchCooperativeKernel's occupancy rule "
+                    f"(schedule='grid_stride' pages blocks through a "
+                    f"capacity-sized resident wave instead)")
             if chunk is not None and int(chunk) < grid:
                 raise CoxUnsupported(
                     f"cooperative launch of '{ck.kernel.name}': "
@@ -141,6 +169,8 @@ class LaunchPlan:
                     f"phase — drop chunk= (the plan schedules all "
                     f"{grid} blocks as one wave)")
             chunk = grid
+        else:
+            n_resident = None  # chunked plans carry no wave width
         if chunk is None:
             chunk = min(grid, DEFAULT_CHUNK)
         chunk = max(1, min(int(chunk), grid))
@@ -149,7 +179,8 @@ class LaunchPlan:
                    has_atomics=bool(atomics),
                    captures_atomic_old=any(s.dst for s in atomics),
                    warp_exec=warp_exec, grid_dim=grid3, block_dim=block3,
-                   n_phases=n_phases)
+                   n_phases=n_phases, schedule=schedule,
+                   n_resident=n_resident)
         plan.check_warp_batchable()
         return plan
 
@@ -235,6 +266,31 @@ class LaunchPlan:
              "gdim": jnp.int32(self.grid)}
         u.update(scalars)
         return u
+
+    # ---------------- grid-stride waves ----------------
+
+    def n_stride_waves(self, total: Optional[int] = None) -> int:
+        """How many resident waves a grid-stride launch runs:
+        ``ceil(total / n_resident)`` (default: the whole grid; sharded
+        passes its per-device block count)."""
+        n = self.grid if total is None else int(total)
+        return max(1, -(-n // self.n_resident))
+
+    def stride_bids(self, wave, *, base=0, limit: Optional[int] = None):
+        """In-graph block ids of one grid-stride wave: the contiguous
+        slice ``base + wave·R … base + (wave+1)·R`` of width
+        ``R = n_resident``, entries at/past ``limit`` (default: the
+        grid) masked to -1 — exactly row ``wave`` of the chunk table
+        the chunked schedule would materialize, except computed inside
+        the staged program so no O(grid) host array ever exists.
+        ``wave``/``base`` may be traced (``fori_loop`` index,
+        ``axis_index`` device offset)."""
+        R = self.n_resident
+        limit = self.grid if limit is None else limit
+        start = (jnp.asarray(base, jnp.int32)
+                 + jnp.asarray(wave, jnp.int32) * jnp.int32(R))
+        bids = start + jnp.arange(R, dtype=jnp.int32)
+        return jnp.where(bids < jnp.int32(limit), bids, jnp.int32(-1))
 
     # ---------------- chunking ----------------
 

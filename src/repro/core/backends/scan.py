@@ -11,6 +11,14 @@ carry holds global memory (phase *p+1* blocks observe every phase-*p*
 write — the grid barrier's guarantee) while each block's persistent
 state (carried locals + shared memory) rides the scan's per-step
 xs/ys — sliced in by block id, stacked back out.
+
+``schedule='grid_stride'`` swaps the scanned ``arange(grid)`` for a
+counted ``lax.fori_loop`` whose index *is* the block id — the same
+serial block order, so results are bitwise-identical, but with no
+O(grid) index array in the program (scan's wave width is 1 by
+construction, so the stride wave degenerates to the loop counter).
+Phased grid-stride pages each block's persistent state through
+``dynamic_slice``/``dynamic_update_slice`` instead of scan xs/ys.
 """
 from __future__ import annotations
 
@@ -34,6 +42,16 @@ def build_fn(plan: LaunchPlan, mesh=None, axis: str = "data"):
     block_fn = make_block_fn(plan.ck, n_warps=plan.n_warps, mode=plan.mode,
                              simd=plan.simd, warp_exec=plan.warp_exec,
                              block_dim=plan.block_dim, grid_dim=plan.grid_dim)
+    if plan.schedule == "grid_stride":
+        def run(globals_, scalars):
+            def body(i, g):
+                bid = jnp.asarray(i, jnp.int32)
+                g2, _, _ = block_fn(plan.uniforms(bid, scalars), g)
+                return g2
+
+            return lax.fori_loop(0, plan.grid, body, globals_)
+
+        return run
 
     def run(globals_, scalars):
         def step(g, bid):
@@ -58,6 +76,8 @@ def build(plan: LaunchPlan, mesh=None, axis: str = "data",
 
 
 def _build_phased_fn(plan: LaunchPlan):
+    if plan.schedule == "grid_stride":
+        return _build_phased_strided_fn(plan)
     fns = plan.block_fns(track_writes=False)
     bids = jnp.arange(plan.grid, dtype=jnp.int32)
 
@@ -72,6 +92,38 @@ def _build_phased_fn(plan: LaunchPlan):
                 return g2, st2
 
             g, state = lax.scan(step, g, (bids, state))
+        return g
+
+    return run
+
+
+def _build_phased_strided_fn(plan: LaunchPlan):
+    """Cooperative grid-stride: a counted ``fori_loop`` per phase whose
+    index is the block id, paging each block's persistent state in and
+    out of the stacked O(grid) planes with ``dynamic_slice`` — every
+    block of phase *p* completes before phase *p+1* starts, so the grid
+    barrier's guarantee holds at any grid size (the resident capacity
+    becomes a lowering decision, not a launch limit).  Same serial
+    block order as the scanned schedule ⇒ bitwise-identical results."""
+    fns = plan.block_fns(track_writes=False)
+    tmap = jax.tree_util.tree_map
+
+    def run(globals_, scalars):
+        g = globals_
+        state = plan.init_persist()
+        for fn in fns:
+            def body(i, carry, fn=fn):
+                g, st = carry
+                bid = jnp.asarray(i, jnp.int32)
+                st_i = tmap(lambda a: lax.dynamic_index_in_dim(
+                    a, i, 0, keepdims=False), st)
+                g2, _, _, st2 = fn(plan.uniforms(bid, scalars), g,
+                                   state=st_i)
+                st = tmap(lambda a, v: lax.dynamic_update_index_in_dim(
+                    a, v, i, 0), st, st2)
+                return g2, st
+
+            g, state = lax.fori_loop(0, plan.grid, body, (g, state))
         return g
 
     return run

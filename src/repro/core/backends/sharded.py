@@ -14,12 +14,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
 from ..execute import make_block_fn
 from . import merge
-from .block_vmap import run_chunked, run_phase_wave
+from .block_vmap import run_chunked, run_phase_wave, run_strided
 from .plan import LaunchPlan, check_donate_supported
 
 name = "sharded"
@@ -40,6 +41,8 @@ def build_fn(plan: LaunchPlan, mesh=None, axis: str = "data"):
                              simd=plan.simd, track_writes=True,
                              warp_exec=plan.warp_exec,
                              block_dim=plan.block_dim, grid_dim=plan.grid_dim)
+    if plan.schedule == "grid_stride":
+        return _build_strided_fn(plan, mesh, axis, block_fn)
     bid_table = jnp.asarray(plan.device_bid_table(ndev))
 
     def device_fn(dev_bids, g0, scalars):
@@ -60,6 +63,35 @@ def build_fn(plan: LaunchPlan, mesh=None, axis: str = "data"):
     return run
 
 
+def _build_strided_fn(plan: LaunchPlan, mesh, axis: str, block_fn):
+    """Grid-stride over a mesh: the resident slots stripe across
+    devices — device *d* owns the contiguous ids ``[d·per, (d+1)·per)``
+    (the same round-robin-contiguous deal as ``device_bid_table``, so
+    results match the chunked schedule bitwise) and loops its slice in
+    waves of ``n_resident`` with ids computed from ``lax.axis_index``
+    inside the staged program.  No ``(ndev, per)`` table is built or
+    shipped; the per-device working set is ``n_resident × |globals|``
+    regardless of grid size."""
+    ndev = mesh.shape[axis]
+    per = -(-plan.grid // ndev)
+
+    def device_fn(g0, scalars):
+        base = lax.axis_index(axis) * per
+        g, masks, deltas = run_strided(plan, block_fn, g0, scalars,
+                                       fold_deltas=False, base=base,
+                                       total=per)
+        return merge.cross_device_merge(g0, g, masks, deltas, axis)
+
+    fn = shard_map(device_fn, mesh=mesh,
+                   in_specs=(P(), P()), out_specs=P(),
+                   check_vma=False)
+
+    def run(globals_, scalars):
+        return fn(globals_, scalars)
+
+    return run
+
+
 def build(plan: LaunchPlan, mesh=None, axis: str = "data",
           donate: bool = False):
     """Return a jitted ``exe(globals_, scalars) -> globals_`` launcher."""
@@ -76,6 +108,8 @@ def _build_phased_fn(plan: LaunchPlan, mesh, axis: str):
     masked-psum / delta-psum merge at **every phase boundary**, so a
     phase-*p+1* block on one device observes phase-*p* writes made on
     any other device — the grid barrier's guarantee."""
+    if plan.schedule == "grid_stride":
+        return _build_phased_strided_fn(plan, mesh, axis)
     ndev = mesh.shape[axis]
     fns = plan.block_fns(track_writes=True)
     per = -(-plan.grid // ndev)
@@ -102,5 +136,60 @@ def _build_phased_fn(plan: LaunchPlan, mesh, axis: str):
 
     def run(globals_, scalars):
         return fn(bid_table, globals_, scalars)
+
+    return run
+
+
+def _build_phased_strided_fn(plan: LaunchPlan, mesh, axis: str):
+    """Cooperative grid-stride over a mesh: each device pages its
+    contiguous slice of the grid through waves of ``n_resident`` blocks
+    per phase (ids from ``lax.axis_index``, no bid table), accumulating
+    write masks and atomic deltas across its waves, then global memory
+    reconciles with the masked-psum / delta-psum merge at **every phase
+    boundary** — all waves on all devices complete phase *p* before any
+    block starts *p+1*, the grid barrier's guarantee, now without the
+    all-resident capacity limit.  Per-block persistent state stays
+    device-local in stacked planes windowed by ``dynamic_slice``."""
+    ndev = mesh.shape[axis]
+    fns = plan.block_fns(track_writes=True)
+    R = plan.n_resident
+    per = -(-plan.grid // ndev)
+    n_waves = max(1, -(-per // R))
+    tmap = jax.tree_util.tree_map
+
+    def device_fn(g0, scalars):
+        base = lax.axis_index(axis) * per
+        limit = jnp.minimum(jnp.asarray(base, jnp.int32) + jnp.int32(per),
+                            jnp.int32(plan.grid))
+        g = g0
+        state = plan.init_persist(n_blocks=n_waves * R)
+        for fn in fns:
+            masks0 = merge.zeros_masks(g)
+            deltas0 = merge.zeros_deltas(g) if plan.has_atomics else {}
+
+            def wave(i, carry, fn=fn):
+                g, st, m_acc, d_acc = carry
+                bids = plan.stride_bids(i, base=base, limit=limit)
+                st_i = tmap(lambda a: lax.dynamic_slice_in_dim(
+                    a, i * R, R, 0), st)
+                g2, wrote, dsum, st2 = run_phase_wave(
+                    plan, fn, bids, g, scalars, st_i, fold_deltas=False)
+                st = tmap(lambda a, v: lax.dynamic_update_slice_in_dim(
+                    a, v, i * R, 0), st, st2)
+                m_acc = {k: m_acc[k] | wrote[k] for k in m_acc}
+                d_acc = {k: d_acc[k] + dsum[k] for k in d_acc}
+                return g2, st, m_acc, d_acc
+
+            g2, state, masks, deltas = lax.fori_loop(
+                0, n_waves, wave, (g, state, masks0, deltas0))
+            g = merge.cross_device_merge(g, g2, masks, deltas, axis)
+        return g
+
+    fn = shard_map(device_fn, mesh=mesh,
+                   in_specs=(P(), P()), out_specs=P(),
+                   check_vma=False)
+
+    def run(globals_, scalars):
+        return fn(globals_, scalars)
 
     return run

@@ -19,9 +19,12 @@ sources, cheapest first:
 
 Both carry the static *kernel features* the autotuner prunes with:
 shared-memory footprint, warp peel count, and collective density.
-``chunk_footprint`` is the vmap-wave residency model — ``chunk``
-per-block copies of global memory plus per-warp shared copies — whose
-budget decides which chunk candidates are measurable at all.
+``chunk_footprint``/``stride_footprint`` are the wave residency models
+— per-block copies of global memory plus per-warp shared copies, with
+the chunked schedule additionally charged for its materialized O(grid)
+block-id table — and ``schedule_verdict`` turns them into the
+chunked-vs-grid-stride lowering decision (``COX_FOOTPRINT_BUDGET``
+overrides the budget so tests can force the stride path).
 """
 from __future__ import annotations
 
@@ -40,10 +43,20 @@ from .execute import CompiledKernel, walk_instrs
 # (default) never compiles; 'xla' lowers each distinct launch shape once
 ENV_MODE = "COX_COSTMODEL"
 
-# residency budget for a vmap wave's chunk× copies of global memory —
-# sized to a desktop L3; candidates beyond it become grid-stride
-# (smaller-chunk) candidates in the autotuner rather than measurements
+# residency budget for a chunked wave's schedule-dependent footprint —
+# the chunk× copies of global memory plus the materialized O(grid)
+# block-id table — sized to a desktop L3.  Launches whose chunked
+# footprint blows it are lowered to the grid-stride schedule
+# (schedule_verdict below); COX_FOOTPRINT_BUDGET overrides the value
+# (positive byte count) so tests/CI can force the grid-stride path on
+# small inputs.
 FOOTPRINT_BUDGET = 64 << 20
+ENV_BUDGET = "COX_FOOTPRINT_BUDGET"
+
+# wave widths the residency sizer considers, widest first — the same
+# family as autotune.CHUNK_CANDIDATES so a grid-stride wave and a tuned
+# chunk are directly comparable cells
+RESIDENT_CANDIDATES = (32, 16, 8, 4, 2, 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +92,25 @@ _CACHE_MAX = 1024
 def telemetry_mode() -> str:
     mode = os.environ.get(ENV_MODE, "static").strip().lower()
     return mode if mode in ("static", "xla") else "static"
+
+
+def footprint_budget() -> int:
+    """The live residency budget: ``COX_FOOTPRINT_BUDGET`` (a positive
+    byte count, validated — garbage raises at the launch that reads it
+    rather than silently disabling the model) or the built-in
+    ``FOOTPRINT_BUDGET`` default."""
+    raw = os.environ.get(ENV_BUDGET)
+    if raw is None or not raw.strip():
+        return FOOTPRINT_BUDGET
+    try:
+        val = int(raw.strip())
+    except ValueError:
+        raise ValueError(
+            f"{ENV_BUDGET}={raw!r} is not an integer byte count") from None
+    if val <= 0:
+        raise ValueError(
+            f"{ENV_BUDGET}={raw!r} must be a positive byte count")
+    return val
 
 
 def kernel_features(ck: CompiledKernel) -> Tuple[int, int, float]:
@@ -118,16 +150,115 @@ def global_bytes(ck: CompiledKernel, shapes: Dict[str, tuple]) -> int:
     return total
 
 
-def chunk_footprint(ck: CompiledKernel, shapes: Dict[str, tuple], *,
-                    chunk: int, n_warps: int,
-                    warp_exec: str = "serial") -> int:
-    """Resident bytes of one vmap wave: ``chunk`` per-block copies of
-    global memory (the write-mask merge's cost) plus each block's shared
-    memory — per warp when the batched plane copies it."""
+def _per_block_bytes(ck: CompiledKernel, shapes: Dict[str, tuple], *,
+                     n_warps: int, warp_exec: str) -> int:
+    """One block's resident bytes in a vmap wave: its copy of global
+    memory (the write-mask merge's cost) plus its shared memory — per
+    warp when the batched plane copies it."""
     shared, _, _ = kernel_features(ck)
     per_block = global_bytes(ck, shapes)
     per_block += shared * (n_warps if warp_exec == "batched" else 1)
-    return int(chunk) * per_block
+    return per_block
+
+
+def bid_table_bytes(grid: int, chunk: int) -> int:
+    """Bytes of the materialized ``(n_chunks, chunk)`` -1-padded block-id
+    table the chunked schedule scans over (``LaunchPlan.chunked_bids``)
+    — the O(grid) term the grid-stride schedule eliminates."""
+    chunk = max(1, int(chunk))
+    n_chunks = -(-int(grid) // chunk)
+    return n_chunks * chunk * 4          # int32 entries
+
+
+def chunk_footprint(ck: CompiledKernel, shapes: Dict[str, tuple], *,
+                    chunk: int, n_warps: int,
+                    warp_exec: str = "serial",
+                    grid: Optional[int] = None) -> int:
+    """Schedule-dependent resident bytes of the *chunked* schedule:
+    ``chunk`` per-block copies of global memory plus shared memory, and
+    — when the caller supplies ``grid`` — the materialized O(grid)
+    block-id table the chunk walk scans over.  The table term is what a
+    smaller chunk cannot shrink (``ceil(grid/chunk) × chunk`` entries ≈
+    grid regardless of chunk), which is exactly why an over-budget
+    verdict routes to grid-stride instead of clamping."""
+    per_block = _per_block_bytes(ck, shapes, n_warps=n_warps,
+                                 warp_exec=warp_exec)
+    total = int(chunk) * per_block
+    if grid is not None:
+        total += bid_table_bytes(grid, chunk)
+    return total
+
+
+def stride_footprint(ck: CompiledKernel, shapes: Dict[str, tuple], *,
+                     n_resident: int, n_warps: int,
+                     warp_exec: str = "serial") -> int:
+    """Resident bytes of one grid-stride wave: ``n_resident`` slot
+    copies, no table term — block ids are computed in-graph
+    (``bid = wave × n_resident + slot``), so the footprint is
+    grid-independent."""
+    return int(n_resident) * _per_block_bytes(ck, shapes, n_warps=n_warps,
+                                              warp_exec=warp_exec)
+
+
+def resident_slots(ck: CompiledKernel, shapes: Dict[str, tuple], *,
+                   grid: int, n_warps: int, warp_exec: str = "serial",
+                   budget: Optional[int] = None) -> int:
+    """Cost-model-sized grid-stride wave width: the widest
+    ``RESIDENT_CANDIDATES`` entry whose :func:`stride_footprint` fits
+    the budget, floored at ``min(grid, DEFAULT_CHUNK)``.
+
+    The floor matters: one copy of global memory is live under *every*
+    schedule (scan included), so once ``per_block`` alone exceeds the
+    budget, shrinking the wave below the default width stops saving
+    real memory while multiplying the per-wave merge passes — the
+    clamped-chunk fallback's failure mode.  Grid-stride keeps the wave
+    useful and spends the budget where width actually helps."""
+    from .backends.plan import DEFAULT_CHUNK
+    budget = footprint_budget() if budget is None else int(budget)
+    floor = min(int(grid), DEFAULT_CHUNK)
+    for width in RESIDENT_CANDIDATES:
+        if width <= floor:
+            break
+        if width <= grid and stride_footprint(
+                ck, shapes, n_resident=width, n_warps=n_warps,
+                warp_exec=warp_exec) <= budget:
+            return width
+    return max(1, floor)
+
+
+def schedule_verdict(ck: CompiledKernel, shapes: Dict[str, tuple], *,
+                     grid: int, chunk: int, n_warps: int,
+                     warp_exec: str = "serial", backend: str = "vmap",
+                     budget: Optional[int] = None
+                     ) -> Tuple[str, Optional[int]]:
+    """Pick the launch schedule from the footprint model: ``('chunked',
+    None)`` when the materialized chunk-table schedule fits the budget
+    (or the grid is a single wave — there is no table to speak of),
+    else ``('grid_stride', n_resident)`` with the wave width sized by
+    :func:`resident_slots`.  Pure policy — the caller threads the
+    verdict into ``ResolvedLaunch`` with provenance.
+
+    ``backend='scan'`` keys on the block-id sequence alone: scan holds
+    one copy of global memory under every schedule, so its only O(grid)
+    materialized state is the ``arange(grid)`` it scans over — the
+    grid-stride form replaces it with a counted ``fori_loop`` (width 1
+    by construction)."""
+    grid = int(grid)
+    chunk = max(1, int(chunk))
+    budget = footprint_budget() if budget is None else int(budget)
+    if backend == "scan":
+        if bid_table_bytes(grid, 1) > budget:
+            return "grid_stride", 1
+        return "chunked", None
+    if grid <= chunk:
+        return "chunked", None
+    fits = chunk_footprint(ck, shapes, chunk=chunk, n_warps=n_warps,
+                           warp_exec=warp_exec, grid=grid) <= budget
+    if fits:
+        return "chunked", None
+    return "grid_stride", resident_slots(ck, shapes, grid=grid,
+                                         n_warps=n_warps,
+                                         warp_exec=warp_exec, budget=budget)
 
 
 def _static_estimate(ck: CompiledKernel, rl, shapes: Dict[str, tuple]
@@ -210,7 +341,9 @@ def estimate(ck: CompiledKernel, rl, shapes: Dict[str, tuple], *,
     an 'xla' failure degrades to the static walk."""
     mode = telemetry_mode() if mode is None else mode
     key = (id(ck), rl.backend, rl.mode, rl.warp_exec,
-           rl.grid.astuple(), rl.block.astuple(), rl.chunk, simd,
+           rl.grid.astuple(), rl.block.astuple(), rl.chunk,
+           getattr(rl, "schedule", "chunked"),
+           getattr(rl, "n_resident", None), simd,
            mesh is not None, tuple(sorted(shapes.items())), mode)
     with _cache_lock:
         hit = _cache.get(key)

@@ -254,8 +254,8 @@ class LaunchRequest:
         rl = self.rl
         return (self.token, self.ck.n_phases, rl.backend, rl.mode,
                 rl.grid.astuple(), rl.block.astuple(), rl.n_warps,
-                self.simd, self.chunk, rl.warp_exec, _mesh_key(self.mesh),
-                self.axis)
+                self.simd, self.chunk, rl.warp_exec, rl.schedule,
+                rl.n_resident, _mesh_key(self.mesh), self.axis)
 
     def stage_key(self) -> tuple:
         """The staging-cache key *without* the kernel-identity element
@@ -1598,10 +1598,12 @@ class Dispatcher:
     @staticmethod
     def _telemetry_key(req: LaunchRequest) -> tuple:
         """Human-readable stage identity: one row per distinct
-        (kernel, backend, warp_exec, chunk, geometry, device)."""
+        (kernel, backend, warp_exec, chunk, schedule, geometry,
+        device)."""
         rl = req.rl
         return (req.ck.kernel.name, rl.backend, rl.warp_exec,
-                rl.chunk, rl.grid.astuple(), rl.block.astuple(),
+                rl.chunk, rl.schedule, rl.n_resident,
+                rl.grid.astuple(), rl.block.astuple(),
                 _dev_id(req.device))
 
     def _note_telemetry(self, req: LaunchRequest, dispatch_s: float) -> None:
@@ -1623,6 +1625,8 @@ class Dispatcher:
                     "flops": 0.0, "op_estimate": 0.0, "mem_estimate": 0.0,
                     "estimate_source": None, "chunk_source":
                         getattr(req.rl, "chunk_source", "heuristic"),
+                    "schedule_source":
+                        getattr(req.rl, "schedule_source", "heuristic"),
                     "measured_s": 0.0, "measured_launches": 0,
                 }
                 while len(self._telemetry) > TELEMETRY_MAX:
@@ -1659,9 +1663,12 @@ class Dispatcher:
         with self._lock:
             rows = [(k, dict(v)) for k, v in self._telemetry.items()]
         out: List[Dict[str, Any]] = []
-        for (name, backend, warp_exec, chunk, grid, block, dev), rec in rows:
+        for (name, backend, warp_exec, chunk, schedule, n_resident,
+             grid, block, dev), rec in rows:
             rec.update(kernel=name, backend=backend, warp_exec=warp_exec,
-                       chunk=chunk, grid=grid, block=block, device=dev)
+                       chunk=chunk, schedule=schedule,
+                       n_resident=n_resident, grid=grid, block=block,
+                       device=dev)
             n = max(1, rec["launches"])
             if rec["measured_launches"] > 0 and rec["measured_s"] > 0:
                 per = rec["measured_s"] / rec["measured_launches"]
@@ -1692,6 +1699,9 @@ class Dispatcher:
         with self._lock:
             first_sticky = (repr(next(iter(self._sticky.values())))
                             if self._sticky else None)
+            schedules: Dict[str, int] = {}
+            for k in self._telemetry:        # k[4] is the schedule
+                schedules[k[4]] = schedules.get(k[4], 0) + 1
             return {
                 "failures": self.failures,
                 "retries": self.retries,
@@ -1708,6 +1718,7 @@ class Dispatcher:
                 "watchdog_strikes": (self.watchdog.strikes
                                      if self.watchdog else 0),
                 "telemetry_keys": len(self._telemetry),
+                "schedules": schedules,
                 "dispatch_s": sum(r["dispatch_s"]
                                   for r in self._telemetry.values()),
                 "bytes": sum(r["bytes"] for r in self._telemetry.values()),

@@ -207,11 +207,28 @@ def test_return_before_sync_rejected():
 # ---------------------------------------------------------------------------
 
 
-def test_resident_capacity_enforced():
+def test_resident_capacity_enforced_when_chunked_pinned():
+    """An explicit schedule='chunked' pins the all-resident wave, so a
+    grid beyond the capacity still fails CUDA's occupancy rule."""
     sk = GRID_REDUCE
     with pytest.raises(CoxUnsupported, match="resident capacity"):
         sk.kernel.launch(grid=COOP_MAX_RESIDENT_BLOCKS + 1, block=sk.block,
-                         args=sk.make_args())
+                         args=sk.make_args(), schedule="chunked")
+
+
+def test_resident_capacity_lowers_to_grid_stride():
+    """Left on auto, a cooperative grid beyond the resident capacity is
+    grid-strided — a capacity-sized wave pages blocks through each
+    phase — instead of rejected (the PR 4 hard cap is now a lowering
+    decision)."""
+    from repro.core.runtime import resolve_launch
+    ck = GRID_REDUCE.kernel.compiled(collapse="hier")
+    rl = resolve_launch(ck, grid=COOP_MAX_RESIDENT_BLOCKS + 1,
+                        block=GRID_REDUCE.block)
+    assert rl.schedule == "grid_stride"
+    assert rl.schedule_source == "cooperative"
+    assert rl.n_resident == COOP_MAX_RESIDENT_BLOCKS
+    assert rl.chunk == COOP_MAX_RESIDENT_BLOCKS
 
 
 def test_explicit_chunk_that_splits_the_grid_rejected():
